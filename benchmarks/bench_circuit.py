@@ -1,0 +1,44 @@
+"""Paper Fig 6 + Fig 7: circuit-level access time/energy vs cell option.
+
+This is the calibrated-constants plane (DESIGN.md §2a): the bench emits the
+cost-model tables and verifies the paper's stated circuit-level relationships
+hold in the model (Vprech saving >=43%, per-port energy minimum before the
+4th port, write costs growing with ports)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_call
+from repro.core.esam import cost_model as cm
+
+
+def run():
+    # Fig 6 analogue: transposed-port write/read energy+time per cell option
+    for p in range(5):
+        spec = cm.cell_spec(p)
+        emit(
+            f"fig6_cell_{spec.name}",
+            0.0,
+            f"tread_pj={spec.e_tread_pj:.3f};twrite_pj={spec.e_write_pj:.3f};"
+            f"clock_ns={spec.clock_ns:.2f}",
+        )
+    # Fig 7 analogue: per-port inference read energy at Vprech=500mV
+    for p in range(1, 5):
+        spec = cm.cell_spec(p)
+        drain = -(-128 // spec.ports)
+        access_ns = drain * spec.clock_ns
+        emit(
+            f"fig7_ports_{p}",
+            0.0,
+            f"read_pj_per_access={spec.e_read_pj:.3f};"
+            f"array_drain_ns={access_ns:.1f}",
+        )
+    # paper-stated relationships
+    assert cm.E_READ_PORT_PJ[0] < cm.E_READ_1RW_PJ * (1 - cm.VPRECH_ENERGY_SAVING) + 0.02
+    assert cm.E_READ_PORT_PJ[3] > cm.E_READ_PORT_PJ[2]      # 4th port turns upward
+    assert all(a < b for a, b in zip(cm.E_WRITE_PORT_PJ, cm.E_WRITE_PORT_PJ[1:]))
+    emit("fig7_vprech_saving", 0.0,
+         f"saving>=43%:ok;time_penalty<=19%:{cm.VPRECH_TIME_PENALTY <= 0.19}")
+
+
+if __name__ == "__main__":
+    run()

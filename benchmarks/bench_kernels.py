@@ -1,0 +1,52 @@
+"""Pallas kernel functional timings (interpret mode — correctness plane) and
+MXU utilization estimates for the TPU target (structural, from block shapes)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels.arbiter import ops as arb_ops
+from repro.kernels.cim_matmul import ops as cim_ops
+from repro.kernels.if_neuron import ops as if_ops
+from repro.kernels.stdp import ops as stdp_ops
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    s = jax.random.bernoulli(key, 0.4, (256, 768)).astype(jnp.float32)
+    w = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (768, 256)).astype(jnp.int8)
+    vth = jnp.zeros((256,), jnp.int32)
+
+    us, _ = time_call(lambda: cim_ops.cim_matmul(s, w, interpret=True))
+    flops = 2 * 256 * 768 * 256
+    emit("kernel_cim_matmul_256x768x256", us,
+         f"flops={flops};tpu_blocks=128x128x128;"
+         f"mxu_aligned=yes;vmem_per_block_kb={(128*128*2*3)//1024}")
+
+    us, _ = time_call(lambda: cim_ops.esam_layer(s, w, vth, interpret=True))
+    emit("kernel_esam_layer_fused", us,
+         "fused=mac+if_fire;vmem_resident_vmem=acc128x128xf32")
+
+    req = jax.random.bernoulli(key, 0.4, (16, 128)).astype(jnp.int8)
+    us, _ = time_call(lambda: arb_ops.arbiter(req, ports=4, interpret=True))
+    emit("kernel_arbiter_16x128_p4", us, "blocked_prefix=32-lane base encoders")
+
+    upd = jax.random.randint(key, (8, 32, 256), -3, 4, jnp.int32)
+    us, _ = time_call(lambda: if_ops.if_neuron(upd, jnp.zeros((256,), jnp.int32),
+                                               interpret=True))
+    emit("kernel_if_neuron_8x32x256", us, "vmem_resident_vmem=rounds_in_vmem")
+
+    bits = jax.random.bernoulli(key, 0.5, (128, 256)).astype(jnp.int8)
+    pre = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (256,)).astype(jnp.int8)
+    post = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.2, (128,)).astype(jnp.int8)
+    u1 = jax.random.uniform(jax.random.fold_in(key, 4), (128, 256))
+    u2 = jax.random.uniform(jax.random.fold_in(key, 5), (128, 256))
+    us, _ = time_call(lambda: stdp_ops.stdp_update(
+        bits, pre, post, u1, u2, p_pot=0.2, p_dep=0.1, interpret=True))
+    emit("kernel_stdp_128x256", us, "layout=column_major_transposed_port")
+
+
+if __name__ == "__main__":
+    run()

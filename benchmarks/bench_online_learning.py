@@ -1,0 +1,49 @@
+"""Paper Sec 4.4.1: transposable-port online-learning column access —
+reproduces the 26.0x / 19.5x read/write speedups and runs one measured
+STDP epoch with its cost accounting."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.esam import cost_model as cm, learning
+from repro.data import digits
+
+
+def run():
+    base = learning.column_update_cost(0)
+    c4 = learning.column_update_cost(4)
+    emit("learning_1rw_baseline", 0.0,
+         f"col_read_ns={base.read_ns:.1f};col_write_ns={base.write_ns:.1f};"
+         f"energy_pj={base.energy_pj:.1f}")
+    emit("learning_4r_transposed", 0.0,
+         f"col_read_ns={c4.read_ns};col_write_ns={c4.write_ns};"
+         f"read_speedup={c4.speedup_read_vs_1rw:.1f}x(paper 26.0x);"
+         f"write_speedup={c4.speedup_write_vs_1rw:.1f}x(paper 19.5x)")
+
+    # measured online-learning epoch (supervised stochastic STDP, Sec 2.2/[16])
+    x, y = digits.make_spike_dataset(512, seed=7)
+    x, y = jnp.asarray(x).astype(bool), jnp.asarray(y)
+    bits = jax.random.bernoulli(jax.random.PRNGKey(0), 0.5, (768, 10)).astype(jnp.int8)
+    vth = [jnp.full((10,), 2**31 - 1, jnp.int32)]
+
+    def epoch(b):
+        return learning.online_learning_epoch([b], vth, x, y, jax.random.PRNGKey(1),
+                                              p_pot=0.2, p_dep=0.1)
+
+    us, (bits2, n_updates) = time_call(epoch, bits, repeats=1)
+    t_4r_us = n_updates * (c4.read_ns + c4.write_ns) * 1e-3
+    t_1rw_us = n_updates * (base.read_ns + base.write_ns) * 1e-3
+    e_4r_nj = n_updates * c4.energy_pj * 1e-3
+    e_1rw_nj = n_updates * base.energy_pj * 1e-3
+    emit("learning_epoch_cost", us,
+         f"column_updates={n_updates};hw_time_4r_us={t_4r_us:.1f};"
+         f"hw_time_1rw_us={t_1rw_us:.1f};hw_energy_4r_nj={e_4r_nj:.1f};"
+         f"hw_energy_1rw_nj={e_1rw_nj:.1f};"
+         f"end_to_end_speedup={t_1rw_us/t_4r_us:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

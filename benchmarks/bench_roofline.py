@@ -1,0 +1,45 @@
+"""Roofline table (deliverable g): reads the dry-run JSON cache and emits per
+(arch x shape x mesh): the three roofline terms, the dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    cells = load_cells()
+    if not cells:
+        emit("roofline", 0.0, "NO_DRYRUN_CACHE(run python -m repro.launch.dryrun)")
+        return
+    for c in cells:
+        r = c["roofline"]
+        frac = c.get("useful_flops_frac")
+        emit(
+            f"roofline_{c['key']}",
+            0.0,
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};bottleneck={c['bottleneck']};"
+            f"useful_flops_frac={frac:.3f};" if frac else "useful_flops_frac=n/a;"
+        )
+    n_bad = sum(1 for c in cells if c["bottleneck"] != "compute_s")
+    emit("roofline_summary", 0.0,
+         f"cells={len(cells)};non_compute_bound={n_bad}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig 8: system-level power / throughput / energy / area across the
+five SRAM cell options, on the calibration activity profile.  Reproduces the
+headline V1 ratios (3.1x speed, 2.2x energy efficiency)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.esam import cost_model as cm
+from repro.core.esam.network import reference_activity, system_stats
+
+
+def run():
+    act = reference_activity()
+    stats = [system_stats(cm.PAPER_TOPOLOGY, act, p) for p in range(5)]
+    for s in stats:
+        emit(
+            f"fig8_{s.cell}",
+            0.0,
+            f"throughput_minf_s={s.throughput_inf_s/1e6:.2f};"
+            f"energy_pj_inf={s.energy_pj_per_inf:.0f};"
+            f"power_mw={s.power_mw:.1f};area_ratio={s.area_ratio_vs_1rw:.2f};"
+            f"latency_ns={s.latency_ns:.1f};bottleneck_tile={s.bottleneck_tile}",
+        )
+    speedup = stats[4].throughput_inf_s / stats[0].throughput_inf_s
+    eff = stats[0].energy_pj_per_inf / stats[4].energy_pj_per_inf
+    emit("fig8_headline", 0.0,
+         f"speedup_4r={speedup:.2f}x(paper {cm.PAPER_SPEEDUP_4R}x);"
+         f"energy_eff_4r={eff:.2f}x(paper {cm.PAPER_ENERGY_EFF_4R}x)")
+
+
+if __name__ == "__main__":
+    run()

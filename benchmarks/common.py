@@ -1,0 +1,25 @@
+"""Benchmark helpers: timing + CSV emission (`name,us_per_call,derived`)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, **kwargs) -> tuple[float, object]:
+    """Median wall-time (us) of fn(*args) with jax block_until_ready."""
+    import jax
+
+    out = None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,55 @@
+"""Quickstart: the whole paper in one script.
+
+1. Train the 768:256:256:256:10 BNN (sign activations, per-neuron biases).
+2. Convert it losslessly to a binary-SNN with per-neuron thresholds ([15]).
+3. Run event-driven cycle-accurate inference through the multiport arbiter.
+4. Report the system-level operating point for every SRAM cell option and
+   check the paper's headline claims (3.1x speed / 2.2x energy, Table 3 row).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.esam import bnn, conversion, cost_model as cm
+from repro.core.esam.network import reference_activity, system_stats
+from repro.data import digits
+
+
+def main():
+    print("== 1. train BNN (synthetic digits; MNIST is offline-unavailable) ==")
+    x, y = digits.make_spike_dataset(2048, seed=0)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    params, acc = bnn.fit(jax.random.PRNGKey(0), cm.PAPER_TOPOLOGY, xj, yj,
+                          steps=200, batch=128)
+    print(f"   BNN train accuracy: {acc*100:.1f}%")
+
+    print("== 2. lossless BNN -> binary-SNN conversion ==")
+    net = conversion.bnn_to_snn(params)
+    snn_acc = float((net.forward(xj.astype(bool)).argmax(-1) == yj).mean())
+    print(f"   SNN accuracy: {snn_acc*100:.1f}%  topology={net.topology}")
+
+    print("== 3. event-driven (cycle-accurate) inference, 4 ports ==")
+    sample = jnp.asarray(x[0]).astype(bool)
+    logits, traces = net.forward_cycle_accurate(sample, ports=4)
+    cycles = [int(t.cycles) for t in traces]
+    print(f"   predicted class: {int(logits.argmax())} (label {int(y[0])})")
+    print(f"   cycles per tile until R_empty: {cycles}")
+
+    print("== 4. system-level operating points (Fig 8 / Table 3) ==")
+    counts = [np.asarray(c, np.float64) for c in net.spike_counts(xj[:256].astype(bool))]
+    for ports in range(5):
+        s = system_stats(cm.PAPER_TOPOLOGY, counts, ports)
+        print(f"   {s.cell:7s}: {s.throughput_inf_s/1e6:6.2f} MInf/s  "
+              f"{s.energy_pj_per_inf:7.1f} pJ/Inf  {s.power_mw:5.1f} mW")
+    ref = reference_activity()
+    s0, s4 = system_stats(cm.PAPER_TOPOLOGY, ref, 0), system_stats(cm.PAPER_TOPOLOGY, ref, 4)
+    print(f"   headline (ref profile): speedup "
+          f"{s4.throughput_inf_s/s0.throughput_inf_s:.2f}x (paper 3.1x), "
+          f"energy-eff {s0.energy_pj_per_inf/s4.energy_pj_per_inf:.2f}x (paper 2.2x)")
+
+
+if __name__ == "__main__":
+    main()

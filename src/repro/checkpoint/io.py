@@ -1,0 +1,124 @@
+"""Sharded checkpointing: npz-per-step + JSON manifest, mesh-shape agnostic.
+
+Save: every leaf is written under its pytree path; the manifest records
+shapes/dtypes and the step.  Restore: leaves are loaded and device_put against
+the *target* shardings — which may belong to a different mesh than the one
+that saved (elastic restart: 512 -> 256 chips re-sharding is a device_put).
+Writes are atomic (tmp dir + rename) so a crash mid-save never corrupts the
+latest checkpoint.  An async mode hands the write to a daemon thread so the
+train loop never blocks on IO.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz can't store ml_dtypes (bfloat16 etc.) — persist as a bit-view."""
+    dtype = str(arr.dtype)
+    if arr.dtype.kind not in "fiub?" or dtype == "bfloat16":
+        return arr.view(np.uint16) if dtype == "bfloat16" else arr, dtype
+    return arr, dtype
+
+
+def _decode(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def save(tree, directory: str, step: int, *, extra: Optional[dict] = None,
+         async_: bool = False) -> threading.Thread | None:
+    """Write checkpoint ``directory/step_<N>``. Returns the writer thread when
+    async (join it before exiting the process)."""
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    encoded = {k: _encode(v) for k, v in flat.items()}
+    flat = {k: v[0] for k, v in encoded.items()}
+    dtypes = {k: v[1] for k, v in encoded.items()}
+
+    def _write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "leaves.npz"), **flat)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": dtypes[k]} for k, v in flat.items()},
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(tree_like, directory: str, step: int, *, shardings=None):
+    """Restore into the structure of ``tree_like``; device_put against
+    ``shardings`` (same structure) when given — this is where elastic
+    re-sharding happens."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    flat_keys = list(_flatten(tree_like).keys())
+    leaves = []
+    for k in flat_keys:
+        arr = _decode(data[k], manifest["leaves"][k]["dtype"])
+        leaves.append(arr)
+    treedef = jax.tree.structure(tree_like)
+    restored = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), restored, shardings
+        )
+    else:
+        restored = jax.tree.map(
+            lambda a, t: jax.numpy.asarray(a, dtype=t.dtype), restored, tree_like
+        )
+    return restored, manifest
+
+
+def prune_old(directory: str, keep: int = 3):
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,27 @@
+"""chameleon-34b [vlm] 48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536.
+Early-fusion: VQ image tokens live in the 65536-entry vocab, so the frontend
+stub supplies precomputed token ids; QK-norm per the Chameleon recipe.
+[arXiv:2405.09818; unverified]"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,
+    frontend="vq_tokens",
+    fsdp=True,                 # 34B params: TP alone leaves ~25 GB fp32 opt state
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+    vocab_size=512, remat=False, fsdp=False,
+)

@@ -1,0 +1,13 @@
+"""The paper's own system: 768:256:256:256:10 binary-SNN for digit
+classification (Sec 4.4.2), as a config on the same substrate.
+
+Inference is embarrassingly data-parallel: the batched functional plane
+(dense binary MAC) shards the sample batch over ('pod','data') and the
+weights are replicated (330K synapses = 41 KB of bits).
+"""
+
+TOPOLOGY = (768, 256, 256, 256, 10)
+READ_PORTS = 4
+
+# Shape used for the ESAM dry-run cell (batched inference serving).
+ESAM_BATCH = 65536

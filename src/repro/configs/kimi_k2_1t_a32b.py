@@ -1,0 +1,45 @@
+"""kimi-k2-1t-a32b [moe] 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384 experts top-8 — trillion-parameter tier.
+[arXiv:2501.kimi2; unverified — paper-table config]
+
+Parallelism tier: expert weights are the 1T bulk; they shard over
+'model' (EP, 384/16=24 local experts) AND 'data' (FSDP on the expert ff dim,
+2048/16=128) — 2 TB of bf16 params / 512 chips = 4 GB/chip.  Optimizer states
+run in bf16 with stochastic rounding (train.optimizer), since fp32 m/v alone
+would be 8 TB.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=163840,
+    n_experts=384,
+    top_k=8,
+    head_dim=112,
+    fsdp=True,
+    expert_fsdp=True,
+    optimizer_dtype="bfloat16",
+    # §Perf/HC2: weight-stationary MoE (move tokens, not the 2 TB of expert
+    # weights — iter4), 4-way grad accumulation for activation temp,
+    # dots-saveable remat, capacity factor 1.0 (kills the 25% pad overcompute).
+    microbatches=4,
+    remat_policy="dots",
+    capacity_factor=1.0,
+    moe_impl="gather_tokens",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=64,
+    vocab_size=512, n_experts=8, top_k=2, head_dim=32, remat=False,
+    fsdp=False, expert_fsdp=False, optimizer_dtype="float32",
+    microbatches=1, remat_policy="full", capacity_factor=1.25,
+)

@@ -1,0 +1,33 @@
+"""seamless-m4t-medium [audio] 12L d_model=1024 16H (GQA kv=16) d_ff=4096
+vocab=256206 — encoder-decoder, multimodal.  [arXiv:2308.11596; hf]
+
+The assigned "12L" is realized as 12 encoder + 12 decoder layers (M4T-medium
+is an encoder-decoder; DESIGN.md §8).  The audio frontend is a STUB: inputs
+arrive as precomputed speech-frame embeddings [B, S_src, d_model] via
+``input_specs()``; only the backbone is built.  Training shape splits the
+assigned seq_len as src=tgt=seq_len/2.  No decode-skip: the decoder serves
+decode_32k; long_500k is skipped (full attention, enc-dec).
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=24,
+    enc_layers=12,
+    dec_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    frontend="audio_frames",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=4, enc_layers=2, dec_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab_size=512, remat=False,
+)

@@ -1,0 +1,42 @@
+"""xlstm-125m [ssm] 12L d_model=768 4H d_ff=0 vocab=50304 — sLSTM + mLSTM
+blocks.  d_ff=0 per the assignment: there is no separate FFN; the mLSTM block
+carries its own 2x up/down projection (Beck et al. 2024 block design).
+sLSTM at layers (1, 7) approximating the paper's 7:1 mixing ratio.
+[arXiv:2405.04517; unverified]
+
+Decode state is O(1) in sequence length (matrix memory per head), which
+qualifies this arch for long_500k.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="xlstm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_layers=(1, 7),
+    rope_theta=0.0,          # xLSTM has no positional rotation
+    supports_long_context=True,
+    # §Perf/HC1: 125M params (250 MB bf16) never justify 16-way TP — the
+    # per-timestep sLSTM collectives made the baseline 82x collective-bound.
+    # Replicate all weights, spread the batch over every mesh axis.  At this
+    # size ZeRO's param all-gather costs more than replicated opt state
+    # (1.1 GB/dev), and the grad all-reduce rides in bf16.
+    sharding_profile="pure_dp",
+    zero1=False,
+    grad_dtype="bfloat16",
+    mlstm_chunk=256,
+    quad_dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=3, d_model=64, n_heads=2, n_kv_heads=2,
+    vocab_size=512, slstm_layers=(1,), remat=False,
+)

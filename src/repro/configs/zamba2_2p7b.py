@@ -1,0 +1,37 @@
+"""zamba2-2.7b [hybrid] 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared-weight attention blocks.
+[arXiv:2411.15242; hf]
+
+Zamba2 scheme: the 54 Mamba2 layers are grouped; one *shared* transformer
+block (attn + MLP, weights reused) is applied after every 6th Mamba2 layer.
+Long-context (long_500k) runs sub-quadratically: Mamba2 state is O(1) per
+token and the shared attention uses a 4096-token sliding window for decode.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    shared_attn_period=6,
+    window=4096,
+    supports_long_context=True,
+    # §Perf/HC4 (bonus): the fused mamba in_proj splits at offsets misaligned
+    # with 16-way TP, forcing per-layer all-to-all/collective-permute
+    # resharding; separate shard-aligned projections remove it.
+    mamba_split_proj=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab_size=512, ssm_state=16, shared_attn_period=2, window=64, remat=False,
+)

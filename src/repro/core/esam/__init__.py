@@ -1,0 +1,27 @@
+"""ESAM core: the paper's contribution as a composable JAX module.
+
+Planes:
+  * functional (batched, MXU-friendly): ``EsamNetwork.forward`` — bit-exact
+    with the event-driven plane; this is what the TPU kernels accelerate.
+  * cycle-accurate (event-driven): ``EsamNetwork.forward_cycle_accurate`` +
+    ``system_stats`` — reproduces the paper's throughput/energy/power claims
+    from the calibrated 3nm cost model.
+"""
+
+from repro.core.esam import arbiter, bnn, conversion, cost_model, learning, neuron, network, tile
+from repro.core.esam.network import EsamNetwork, SystemStats, reference_activity, system_stats
+
+__all__ = [
+    "arbiter",
+    "bnn",
+    "conversion",
+    "cost_model",
+    "learning",
+    "neuron",
+    "network",
+    "tile",
+    "EsamNetwork",
+    "SystemStats",
+    "system_stats",
+    "reference_activity",
+]

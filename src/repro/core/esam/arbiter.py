@@ -1,0 +1,86 @@
+"""Multiport spike arbiter — functional (pure-jnp) plane.
+
+The paper's arbiter (Sec 3.3, Fig 4) is p cascaded fixed-priority encoders:
+port 0 grants the leftmost pending request, port 1 the next-leftmost, etc.,
+all within one clock cycle; granted requests are masked out of the request
+vector.  A priority chain is sequential gate logic with no SIMD analogue, so
+on TPU we re-express the *function* as prefix-sum rank selection:
+
+    rank(i)   = (# of requests at indices <= i) - 1      (exclusive of non-requests)
+    grant_k   = one-hot( request with rank == k ),  k < p
+
+which produces bit-identical grant vectors to the hardware cascade (tested
+against a pure-Python priority-encoder oracle).  The paper's own critical-path
+fix — a *tree* of short priority encoders — is precisely a blocked prefix
+structure; the Pallas kernel in ``repro.kernels.arbiter`` mirrors that
+blocking for VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def priority_grants(requests: jax.Array, ports: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One arbiter clock cycle.
+
+    Args:
+      requests: bool[n] pending spike requests (R).
+      ports: number of grant ports p.
+
+    Returns:
+      grants:  bool[p, n] — one-hot grant vector per port (all-zero if noR).
+      remaining: bool[n] — R' = R minus granted requests.
+      valid:   bool[p] — per-port validity flag (False == the paper's noR),
+               consumed by the neuron array so unused ports are not summed.
+    """
+    r = requests.astype(jnp.int32)
+    # rank[i] = number of earlier-or-equal requests, minus 1 -> 0-based rank.
+    rank = jnp.cumsum(r) - 1
+    port_ids = jnp.arange(ports)[:, None]                       # [p, 1]
+    grants = (requests[None, :]) & (rank[None, :] == port_ids)  # [p, n]
+    granted_any = jnp.any(grants, axis=0)
+    remaining = requests & ~granted_any
+    valid = jnp.any(grants, axis=1)
+    return grants, remaining, valid
+
+
+def priority_grants_oracle(requests: np.ndarray, ports: int):
+    """Pure-Python cascade of fixed-priority encoders (Fig 4 semantics)."""
+    r = np.asarray(requests, dtype=bool).copy()
+    n = r.shape[0]
+    grants = np.zeros((ports, n), dtype=bool)
+    valid = np.zeros((ports,), dtype=bool)
+    for k in range(ports):  # cascaded 1-port arbiters
+        nz = np.flatnonzero(r)
+        if nz.size == 0:
+            break  # noR propagates to all later ports
+        grants[k, nz[0]] = True  # leftmost pending request
+        valid[k] = True
+        r[nz[0]] = False         # R' masks out the granted request
+    return grants, r, valid
+
+
+def drain_cycles(n_pending: jax.Array, ports: int) -> jax.Array:
+    """Clock cycles for a p-port arbiter to drain ``n_pending`` requests."""
+    return -(-n_pending // ports)  # ceil division; 0 pending -> 0 cycles
+
+
+def layer_drain_cycles(spike_counts_per_group: jax.Array, ports: int) -> jax.Array:
+    """Cycles until R_empty for a layer of 128-row groups, each with its own
+    p-port arbiter (Sec 4.4.2: 'Each SRAM has its own 128-wide Arbiter')."""
+    return jnp.max(drain_cycles(spike_counts_per_group, ports))
+
+
+def split_row_groups(requests: jax.Array, group: int = 128) -> jax.Array:
+    """Reshape a layer-wide request vector into [n_groups, group] row groups.
+
+    The layer width must be a multiple of ``group`` (the paper pads its first
+    layer to exactly 6x128 by cropping MNIST 784 -> 768).
+    """
+    n = requests.shape[-1]
+    if n % group:
+        raise ValueError(f"layer width {n} not a multiple of row-group size {group}")
+    return requests.reshape(*requests.shape[:-1], n // group, group)

@@ -1,0 +1,128 @@
+"""Binary Neural Network training (Sec 4.4.2 setup).
+
+The paper trains the 768:256:256:256:10 network "as a Binary Neural Network
+(BNN) with a sign activation function and per-neuron biases", then converts it
+to a binary-SNN with per-neuron thresholds (Kim et al. [15]).  This module is
+the training half: straight-through-estimator (STE) training of a sign-weight,
+sign-activation MLP in pure JAX.
+
+Conventions (must match conversion.py exactly):
+  * first-layer inputs are binary spikes in {0,1};
+  * hidden activations are sign(z) in {-1,+1} with sign(0) = +1;
+  * weights used in the forward pass are sign(latent) in {-1,+1};
+  * every layer has a real-valued per-neuron bias;
+  * the last layer emits real logits (no activation).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def sign_pm1(x: jax.Array) -> jax.Array:
+    """sign with sign(0) = +1 (the hardware compare is V_mem >= V_th)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def ste_sign(x: jax.Array) -> jax.Array:
+    """Forward sign, backward clipped-identity (hard-tanh STE)."""
+    clipped = jnp.clip(x, -1.0, 1.0)
+    return clipped + jax.lax.stop_gradient(sign_pm1(x) - clipped)
+
+
+def init_params(key: jax.Array, topology: Sequence[int]) -> list[dict]:
+    params = []
+    for i in range(len(topology) - 1):
+        key, sub = jax.random.split(key)
+        fan_in = topology[i]
+        w = jax.random.normal(sub, (topology[i], topology[i + 1]), jnp.float32)
+        w = w * (1.0 / jnp.sqrt(fan_in))
+        params.append({"w": w, "b": jnp.zeros((topology[i + 1],), jnp.float32)})
+    return params
+
+
+def forward(params: list[dict], x01: jax.Array) -> jax.Array:
+    """x01: float[..., n_in] in {0,1}.  Returns (scaled) real logits.
+
+    Pre-activations are scaled by 1/sqrt(fan_in) *after* the bias so the STE
+    hard-tanh window sees unit-variance inputs; sign((W.x+b)/c) == sign(W.x+b)
+    for c>0, so the binary behaviour — and hence the SNN conversion — is
+    unaffected (tests/test_bnn_conversion.py checks bit-exactness).
+    """
+    h = x01
+    for i, layer in enumerate(params):
+        wb = ste_sign(layer["w"])
+        inv = 1.0 / jnp.sqrt(jnp.asarray(layer["w"].shape[0], jnp.float32))
+        z = (h @ wb + layer["b"]) * inv
+        if i < len(params) - 1:
+            h = ste_sign(z)      # hidden activations in {-1,+1}
+        else:
+            return z
+    raise AssertionError
+
+
+def hidden_activations(params: list[dict], x01: jax.Array) -> list[jax.Array]:
+    """Exact (non-STE) hidden +-1 activations, for conversion equivalence tests."""
+    h = x01
+    acts = []
+    for layer in params[:-1]:
+        wb = sign_pm1(layer["w"])
+        h = sign_pm1(h @ wb + layer["b"])
+        acts.append(h)
+    return acts
+
+
+def loss_fn(params, x01, labels):
+    logits = forward(params, x01)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll, logits
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def train_step(params, opt_state, x01, labels, lr):
+    """One Adam step.  Tiny bespoke Adam: no optax dependency offline."""
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x01, labels)
+    m, v, t = opt_state
+    t = t + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mh, vh)
+    # Latent-weight clipping keeps the STE window alive (standard BNN practice).
+    params = jax.tree.map(lambda p: jnp.clip(p, -1.5, 1.5), params)
+    acc = (logits.argmax(-1) == labels).mean()
+    return params, (m, v, t), loss, acc
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return (zeros, jax.tree.map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+
+
+def fit(
+    key: jax.Array,
+    topology: Sequence[int],
+    x01: jax.Array,
+    labels: jax.Array,
+    *,
+    steps: int = 300,
+    batch: int = 128,
+    lr: float = 3e-3,
+):
+    """Train a BNN; returns (params, final train accuracy)."""
+    params = init_params(key, topology)
+    opt = init_opt_state(params)
+    n = x01.shape[0]
+    acc = jnp.zeros(())
+    for s in range(steps):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (batch,), 0, n)
+        params, opt, _, acc = train_step(params, opt, x01[idx], labels[idx], lr)
+    return params, float(acc)

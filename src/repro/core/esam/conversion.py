@@ -1,0 +1,47 @@
+"""BNN -> binary-SNN conversion with per-neuron thresholds (Sec 4.4.2, [15]).
+
+The conversion is *exact*: the SNN's spike pattern equals the BNN's binary
+activation pattern layer-by-layer, and the SNN readout is an argmax-preserving
+affine transform of the BNN logits.  Derivation (all integer arithmetic):
+
+First tile (inputs are {0,1} spikes s):
+    BNN fires:   W.s + b >= 0   <=>   W.s >= -b          => V_th = ceil(-b)
+
+Hidden tiles (BNN activation a = 2s - 1 in {-1,+1}):
+    W.a + b = 2 W.s - colsum(W) + b >= 0
+                               <=>  W.s >= (colsum - b)/2 => V_th = ceil((colsum-b)/2)
+
+Output tile (real logits, no threshold):
+    logits = W.a + b = 2 (V_mem + (b - colsum)/2)
+    => per-neuron readout offset (b - colsum)/2; argmax unchanged.
+
+V_mem is integer because spikes are {0,1} and weights {-1,+1}; "k >= x  <=>
+k >= ceil(x)" for integer k makes ceil the exact threshold.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.esam import bnn as bnn_mod
+from repro.core.esam.network import EsamNetwork
+
+
+def bnn_to_snn(params: list[dict]) -> EsamNetwork:
+    weight_bits, vth = [], []
+    for i, layer in enumerate(params):
+        wb = bnn_mod.sign_pm1(layer["w"])                  # {-1,+1}
+        bits = ((wb + 1) // 2).astype(jnp.int8)            # {0,1} stored bits
+        b = layer["b"]
+        if i == 0:
+            theta = jnp.ceil(-b)
+        elif i < len(params) - 1:
+            theta = jnp.ceil((wb.sum(axis=0) - b) / 2.0)
+        else:
+            theta = jnp.full((wb.shape[1],), jnp.inf)      # output tile: readout only
+            offset = (b - wb.sum(axis=0)) / 2.0
+        weight_bits.append(bits)
+        vth.append(
+            jnp.where(jnp.isinf(theta), jnp.iinfo(jnp.int32).max, theta).astype(jnp.int32)
+        )
+    return EsamNetwork(weight_bits=weight_bits, vth=vth, out_offset=offset)

@@ -1,0 +1,137 @@
+"""Online learning via the transposable port: stochastic 1-bit STDP.
+
+ESAM's learning contribution is *architectural*: the column-wise RW port makes
+"update all synapses of one post-synaptic neuron" a 2x4-cycle operation instead
+of 2x128 (Sec 4.4.1).  The learning *rule* it enables is the stochastic-STDP
+family with 1-bit weights of Yousefzadeh et al. [16]: on a post-synaptic
+learning event, synapses from recently-active pre-neurons potentiate (bit->1)
+with probability p_pot and synapses from silent pre-neurons depress (bit->0)
+with probability p_dep.
+
+On TPU the transposed port becomes a layout choice: the update is a masked
+column write (see kernels/stdp); here is the functional plane plus the cost
+accounting that reproduces the paper's 26.0x / 19.5x claims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.esam import cost_model as cm
+
+
+def stdp_update(
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out]
+    pre_spikes: jax.Array,    # bool[n_in]   — pre-synaptic activity trace
+    post_events: jax.Array,   # bool[n_out]  — which post neurons learn now
+    key: jax.Array,
+    p_pot: float = 0.1,
+    p_dep: float = 0.05,
+) -> jax.Array:
+    """One stochastic-STDP event: returns updated weight bits."""
+    k1, k2 = jax.random.split(key)
+    u_pot = jax.random.uniform(k1, weight_bits.shape)
+    u_dep = jax.random.uniform(k2, weight_bits.shape)
+    pre = pre_spikes[:, None]
+    post = post_events[None, :]
+    potentiate = post & pre & (u_pot < p_pot)
+    depress = post & ~pre & (u_dep < p_dep)
+    new_bits = jnp.where(potentiate, 1, jnp.where(depress, 0, weight_bits))
+    return new_bits.astype(weight_bits.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnUpdateCost:
+    cell: str
+    read_cycles: int
+    write_cycles: int
+    read_ns: float
+    write_ns: float
+    energy_pj: float            # read-modify-write of one column
+    speedup_read_vs_1rw: float
+    speedup_write_vs_1rw: float
+
+
+def column_update_cost(read_ports: int, rows: int = 128) -> ColumnUpdateCost:
+    """Time/energy to read+write one weight column (one learning neuron).
+
+    The 1RW baseline must touch all `rows` rows through the single RW port
+    (2 x 128 cycles = 257.8 ns, 157 pJ for the full array, Sec 4.4.1).  With
+    the transposed column port, access takes COL_MUX_FACTOR cycles each way at
+    the transposed-path clock.
+    """
+    spec = cm.cell_spec(read_ports)
+    rc, wc = cm.column_update_cycles(read_ports, rows)
+    if read_ports == 0:
+        # 1RW column RMW: precharge+read = 2 cycles per row, then one write per
+        # row at the 1RW write time (see cost_model baseline decode).
+        read_ns, write_ns = cm.T1RW_COL_READ_NS, cm.T1RW_COL_WRITE_NS
+        energy = rows * (cm.E_READ_1RW_PJ + cm.E_WRITE_1RW_PJ)  # RMW every row
+    else:
+        clock = cm.T4R_TRANSPOSED_CLOCK_NS
+        # Measured end-to-end column access times for the 4R cell (Sec 4.4.1);
+        # cycle counts for other port counts scale identically (same mux).
+        read_ns = cm.T4R_COL_READ_NS if read_ports == 4 else rc * clock + spec.sram_neuron_ns
+        write_ns = cm.T4R_COL_WRITE_NS if read_ports == 4 else wc * clock + spec.sram_neuron_ns
+        energy = spec.e_tread_pj + spec.e_write_pj   # one column-read + one column-write
+    base_read_ns = cm.T1RW_COL_READ_NS
+    base_write_ns = cm.T1RW_COL_WRITE_NS
+    return ColumnUpdateCost(
+        cell=spec.name,
+        read_cycles=int(rc),
+        write_cycles=int(wc),
+        read_ns=float(read_ns),
+        write_ns=float(write_ns),
+        energy_pj=float(energy),
+        speedup_read_vs_1rw=float(base_read_ns / read_ns),
+        speedup_write_vs_1rw=float(base_write_ns / write_ns),
+    )
+
+
+def online_learning_epoch(
+    network_bits: list[jax.Array],
+    vth: list[jax.Array],
+    spikes: jax.Array,          # bool[batch, n_in]
+    labels: jax.Array,          # int32[batch] — supervised teacher events
+    key: jax.Array,
+    p_pot: float = 0.12,
+    p_dep: float = 0.06,
+):
+    """Supervised-STDP pass over a batch for the *last* tile (delta-rule style).
+
+    Teacher signal: the correct class neuron is a potentiation event; the
+    argmax-wrong neuron is a depression event.  Returns (new last-layer bits,
+    number of column updates) — the count feeds the cost model.
+    """
+    from repro.core.esam import tile as tile_mod
+
+    bits_last = network_bits[-1]
+    n_updates = 0
+    s = spikes
+    for w, th in zip(network_bits[:-1], vth[:-1]):
+        s, _ = tile_mod.functional_tile(w, s, th)
+
+    def body(carry, inp):
+        bits, key = carry
+        s_i, y_i = inp
+        _, vmem = tile_mod.functional_tile(bits, s_i, vth[-1])
+        pred = jnp.argmax(vmem)
+        wrong = pred != y_i
+        post_pot = jax.nn.one_hot(y_i, bits.shape[1], dtype=bool) & wrong
+        post_dep = jax.nn.one_hot(pred, bits.shape[1], dtype=bool) & wrong
+        key, k1, k2 = jax.random.split(key, 3)
+        # correct neuron: Hebbian — pull its column toward the pre pattern
+        bits = stdp_update(bits, s_i, post_pot, k1, p_pot, p_dep)
+        # wrong winner: pure depression of active-pre synapses (bit -> 0).
+        # Expressed via stdp_update with the pre trace inverted and
+        # potentiation disabled — potentiating silent positions would *raise*
+        # the winner's response to shifted variants instead of suppressing it.
+        bits = stdp_update(bits, ~s_i, post_dep, k2, 0.0, p_dep)
+        return (bits, key), wrong.astype(jnp.int32) * 2
+
+    (bits_last, _), upd = jax.lax.scan(body, (bits_last, key), (s, labels))
+    n_updates = int(upd.sum())
+    return bits_last, n_updates

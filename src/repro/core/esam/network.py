@@ -1,0 +1,207 @@
+"""Multi-tile ESAM network: functional + cycle-accurate simulation and the
+system-level performance model (throughput / energy / power / area).
+
+Tiles are cascaded directly; spikes travel between tiles as parallel binary
+pulses (Sec 3.1), which lets the tile pipeline overlap consecutive samples:
+tile t processes sample s while tile t+1 processes sample s-1.  System
+throughput is therefore set by the slowest tile stage; latency is the sum of
+stages (both in cycles of the cell-dependent clock, Table 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.esam import arbiter as arb
+from repro.core.esam import cost_model as cm
+from repro.core.esam import tile as tile_mod
+
+ROW_GROUP = 128
+
+
+@dataclasses.dataclass
+class EsamNetwork:
+    """A stack of CIM-P tiles (binary SNN).
+
+    weight_bits: per layer, {0,1}[n_in, n_out] stored bits ('1' -> +1, '0' -> -1).
+    vth: per layer, int32[n_out] per-neuron thresholds (Fig 5's t-bit register).
+    out_offset: float[n_classes] — per-neuron readout offset folded from the
+      BNN's final-layer bias during conversion (argmax-preserving).
+    """
+
+    weight_bits: list[jax.Array]
+    vth: list[jax.Array]
+    out_offset: jax.Array
+
+    @property
+    def topology(self) -> tuple[int, ...]:
+        return tuple([self.weight_bits[0].shape[0]] + [w.shape[1] for w in self.weight_bits])
+
+    @property
+    def n_neurons(self) -> int:
+        return sum(w.shape[1] for w in self.weight_bits)
+
+    @property
+    def n_synapses(self) -> int:
+        return sum(int(np.prod(w.shape)) for w in self.weight_bits)
+
+    # ------------------------------------------------------------------ #
+    # Functional (batched, MXU-friendly) plane
+    # ------------------------------------------------------------------ #
+    def forward(self, spikes: jax.Array, collect: bool = False):
+        """Batched inference. spikes: bool[..., n_in] -> logits float[..., n_cls].
+
+        The final tile's V_mem plus the folded offset is the classification
+        score (output neurons are read out, not thresholded — argmax readout).
+        """
+        per_layer = []
+        s = spikes
+        for w, th in zip(self.weight_bits[:-1], self.vth[:-1]):
+            s, _ = tile_mod.functional_tile(w, s, th)
+            per_layer.append(s)
+        _, vmem = tile_mod.functional_tile(self.weight_bits[-1], s, self.vth[-1])
+        logits = vmem.astype(jnp.float32) + self.out_offset
+        if collect:
+            return logits, per_layer
+        return logits
+
+    def spike_counts(self, spikes: jax.Array) -> list[jax.Array]:
+        """Per-layer, per-row-group spike counts for a batch (for the cost model).
+
+        Returns a list over tiles of int32[..., n_groups]: the arbiter load of
+        each 128-row group at that tile's input.
+        """
+        counts = []
+        s = spikes
+        for i, (w, th) in enumerate(zip(self.weight_bits, self.vth)):
+            g = arb.split_row_groups(s.astype(jnp.int32))
+            counts.append(g.sum(-1))
+            if i < len(self.weight_bits) - 1:
+                s, _ = tile_mod.functional_tile(w, s, th)
+        return counts
+
+    # ------------------------------------------------------------------ #
+    # Cycle-accurate (event-driven) plane
+    # ------------------------------------------------------------------ #
+    def forward_cycle_accurate(self, spikes1: jax.Array, ports: int):
+        """Single-sample event-driven simulation through every tile.
+
+        Returns (logits, [TileTrace per tile]).  Output logits are bit-identical
+        to ``forward`` (tested) — the multiport schedule only changes *when*
+        contributions accumulate, never their sum.
+        """
+        traces = []
+        s = spikes1
+        for w, th in zip(self.weight_bits, self.vth):
+            tr = tile_mod.simulate_tile(w, s, th, ports)
+            traces.append(tr)
+            s = tr.out_spikes
+        logits = traces[-1].vmem_final.astype(jnp.float32) + self.out_offset
+        return logits, traces
+
+
+# ---------------------------------------------------------------------- #
+# System-level performance model
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SystemStats:
+    cell: str
+    read_ports: int
+    clock_ns: float
+    cycles_per_tile: tuple[float, ...]   # mean cycles until R_empty, + fire cycle
+    bottleneck_tile: int
+    latency_ns: float                    # single-inference latency
+    throughput_inf_s: float              # pipelined
+    energy_pj_per_inf: float
+    dynamic_power_mw: float
+    power_mw: float                      # incl. static
+    area_um2: float
+    area_ratio_vs_1rw: float
+
+
+def _tile_geometry(n_in: int, n_out: int) -> tuple[int, int]:
+    """(row groups, column groups) of 128x128 arrays for an n_in x n_out tile."""
+    return -(-n_in // ROW_GROUP), -(-n_out // ROW_GROUP)
+
+
+def system_stats(
+    topology: Sequence[int],
+    spikes_per_group: Sequence[np.ndarray] | Sequence[Sequence[float]],
+    read_ports: int,
+) -> SystemStats:
+    """Evaluate the full-system operating point for one cell option.
+
+    Args:
+      topology: e.g. (768, 256, 256, 256, 10).
+      spikes_per_group: per tile, array[..., n_groups] of arbiter loads (may be
+        a batch — averaged for throughput/energy; max-over-groups is taken per
+        sample *before* averaging, matching how the hardware stalls).
+      read_ports: 0 (=1RW baseline) .. 4.
+    """
+    spec = cm.cell_spec(read_ports)
+    p = spec.ports
+    n_tiles = len(topology) - 1
+
+    cycles, energy = [], 0.0
+    for t in range(n_tiles):
+        n_in, n_out = topology[t], topology[t + 1]
+        n_groups, n_colgroups = _tile_geometry(n_in, n_out)
+        loads = np.asarray(spikes_per_group[t], dtype=np.float64)
+        loads = loads.reshape(-1, n_groups)          # [batch, groups]
+        drain = np.ceil(loads / p)                   # cycles per group
+        tile_cycles = drain.max(axis=1).mean() + 1.0  # +1: compare/fire cycle
+        cycles.append(tile_cycles)
+
+        total_spikes = loads.sum(axis=1).mean()
+        reads = total_spikes * n_colgroups           # row-read accesses
+        energy += reads * spec.e_read_pj
+        energy += tile_cycles * n_groups * cm.E_ARBITER_PJ_PER_CYCLE_128
+        energy += tile_cycles * n_out * cm.E_NEURON_ACCUM_PJ
+        energy += n_out * cm.E_NEURON_FIRE_PJ
+        energy += tile_cycles * n_groups * n_colgroups * cm.E_TILE_CLOCKTREE_PJ_PER_CYCLE
+
+    bottleneck = int(np.argmax(cycles))
+    stage_ns = max(cycles) * spec.clock_ns
+    throughput = 1e9 / stage_ns
+    latency_ns = float(sum(cycles) * spec.clock_ns)
+    dyn_mw = energy * 1e-12 * throughput * 1e3
+    area = _system_area_um2(topology, read_ports)
+    return SystemStats(
+        cell=spec.name,
+        read_ports=read_ports,
+        clock_ns=spec.clock_ns,
+        cycles_per_tile=tuple(float(c) for c in cycles),
+        bottleneck_tile=bottleneck,
+        latency_ns=latency_ns,
+        throughput_inf_s=float(throughput),
+        energy_pj_per_inf=float(energy),
+        dynamic_power_mw=float(dyn_mw),
+        power_mw=float(dyn_mw + cm.STATIC_POWER_MW),
+        area_um2=area,
+        area_ratio_vs_1rw=area / _system_area_um2(topology, 0),
+    )
+
+
+def _system_area_um2(topology: Sequence[int], read_ports: int) -> float:
+    area = 0.0
+    base = cm.CELL_AREA_6T_UM2 * ROW_GROUP * ROW_GROUP
+    for t in range(len(topology) - 1):
+        g, c = _tile_geometry(topology[t], topology[t + 1])
+        n_arrays = g * c
+        area += n_arrays * (base * cm.CELL_AREA_RATIO[read_ports]
+                            + base * cm.PERIPHERY_AREA_FRACTION)
+    return area
+
+
+def reference_activity(topology: Sequence[int] = cm.PAPER_TOPOLOGY) -> list[np.ndarray]:
+    """The calibration activity profile (see cost_model.REF_SPIKES_PER_GROUP)."""
+    out = []
+    for t in range(len(topology) - 1):
+        n_groups, _ = _tile_geometry(topology[t], topology[t + 1])
+        out.append(np.full((1, n_groups), cm.REF_SPIKES_PER_GROUP[t], np.float64))
+    return out

@@ -1,0 +1,60 @@
+"""Integrate-and-Fire neuron array (Sec 3.4, Fig 5).
+
+Each neuron accumulates the validity-flagged, {+1/-1}-decoded bitline values of
+the p inference ports into its m-bit V_mem register every clock cycle.  When
+the tile's request queue drains (R_empty), V_mem is compared against the
+per-neuron threshold V_th; on fire the output register r is set and V_mem
+resets to zero; a granted handshake (g) clears r.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class NeuronState:
+    """State of one tile's neuron array."""
+
+    vmem: jax.Array      # int32[n_out] membrane potentials
+    fired: jax.Array     # bool[n_out] output spike request register r
+
+    @staticmethod
+    def zeros(n_out: int) -> "NeuronState":
+        return NeuronState(
+            vmem=jnp.zeros((n_out,), jnp.int32),
+            fired=jnp.zeros((n_out,), bool),
+        )
+
+
+def accumulate(state: NeuronState, port_values: jax.Array, valid: jax.Array) -> NeuronState:
+    """One SRAM-read/neuron-accumulate pipeline stage.
+
+    Args:
+      state: neuron state.
+      port_values: int32[p, n_out] — sensed bitline values decoded to {+1,-1}
+        (weight bit '1' -> +1, '0' -> -1).
+      valid: bool[p] — per-port validity flags from the arbiter; an unused
+        port must not be "erroneously read as a '1' and added" (Sec 3.4).
+    """
+    contrib = jnp.where(valid[:, None], port_values, 0).sum(axis=0)
+    return NeuronState(vmem=state.vmem + contrib.astype(jnp.int32), fired=state.fired)
+
+
+def fire(state: NeuronState, vth: jax.Array) -> tuple[NeuronState, jax.Array]:
+    """R_empty event: compare V_mem >= V_th, emit spikes, reset V_mem."""
+    spikes = state.vmem >= vth
+    new = NeuronState(vmem=jnp.where(spikes, 0, 0 * state.vmem), fired=spikes)
+    # NOTE: the paper resets V_mem to zero unconditionally on the compare event
+    # ("V_mem is reset to zero to start accumulating spikes again") — for the
+    # time-static classification task every neuron is compared exactly once per
+    # sample, so we reset all neurons.
+    return new, spikes
+
+
+def decode_bitlines(weight_bits: jax.Array) -> jax.Array:
+    """Map stored weight bits {0,1} to synaptic values {-1,+1} (Fig 5 decode)."""
+    return (2 * weight_bits - 1).astype(jnp.int32)

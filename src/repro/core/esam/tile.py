@@ -1,0 +1,102 @@
+"""Cycle-accurate simulation of one CIM-P tile (Fig 2).
+
+A tile holds one layer's synapse matrix across a grid of <=128x128 SRAM
+arrays.  Row groups (pre-synaptic, 128 rows each) each have their own p-port
+arbiter; the column groups of a row group read the granted rows in the same
+cycle.  Each clock cycle:
+
+  arbiter stage:      every row group grants <= p pending spike requests
+  SRAM+neuron stage:  granted rows are read on RBL0..RBL{p-1}; the neuron
+                      array adds the validity-flagged {+1,-1} values to V_mem
+
+When every row group's request queue is empty (R_empty), neurons compare
+V_mem >= V_th and fire (Sec 3.4).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.esam import arbiter as arb
+from repro.core.esam import neuron as nrn
+
+
+class TileTrace(NamedTuple):
+    """Cycle-by-cycle trace of one tile inference."""
+
+    out_spikes: jax.Array      # bool[n_out]
+    vmem_final: jax.Array      # int32[n_out] V_mem right before the compare
+    cycles: jax.Array          # int32 — cycles until R_empty
+    grants_per_cycle: jax.Array  # int32[max_cycles] — total grants each cycle
+    vmem_trace: jax.Array      # int32[max_cycles, n_out]
+
+
+def max_drain_cycles(rows: int, ports: int, group: int = 128) -> int:
+    """Static upper bound on cycles: a full group drains in ceil(group/p)."""
+    del rows
+    return -(-group // ports)
+
+
+@partial(jax.jit, static_argnames=("ports",))
+def simulate_tile(
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out] stored bits
+    in_spikes: jax.Array,     # bool[n_in]
+    vth: jax.Array,           # int32[n_out]
+    ports: int,
+) -> TileTrace:
+    """Run one tile to R_empty, one arbiter round per scan step."""
+    n_in, n_out = weight_bits.shape
+    w_signed = nrn.decode_bitlines(weight_bits)            # {-1,+1} int32
+    groups = arb.split_row_groups(in_spikes)               # [G, 128]
+    n_groups = groups.shape[0]
+    w_grouped = w_signed.reshape(n_groups, 128, n_out)
+    max_cycles = max_drain_cycles(n_in, ports)
+
+    def cycle(state, _):
+        remaining, vmem = state
+        # Every row group arbitrates independently (own 128-wide arbiter).
+        grants, rem2, valid = jax.vmap(lambda r: arb.priority_grants(r, ports))(remaining)
+        # grants: [G, p, 128]; read the granted rows in every column group.
+        port_vals = jnp.einsum("gpr,grn->gpn", grants.astype(jnp.int32), w_grouped)
+        contrib = jnp.where(valid[:, :, None], port_vals, 0).sum(axis=(0, 1))
+        n_granted = valid.sum().astype(jnp.int32)
+        return (rem2, vmem + contrib.astype(jnp.int32)), (n_granted, vmem + contrib)
+
+    init = (groups, jnp.zeros((n_out,), jnp.int32))
+    (remaining, vmem), (grants_seq, vmem_trace) = jax.lax.scan(
+        cycle, init, None, length=max_cycles
+    )
+    state = nrn.NeuronState(vmem=vmem, fired=jnp.zeros((n_out,), bool))
+    _, out_spikes = nrn.fire(state, vth)
+    cycles = jnp.sum(grants_seq > 0).astype(jnp.int32)
+    return TileTrace(
+        out_spikes=out_spikes,
+        vmem_final=vmem,
+        cycles=cycles,
+        grants_per_cycle=grants_seq,
+        vmem_trace=vmem_trace,
+    )
+
+
+def functional_tile(
+    weight_bits: jax.Array, in_spikes: jax.Array, vth: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Batched functional equivalent: one dense MAC (the TPU-native plane).
+
+    IF accumulation is commutative and the compare happens only at R_empty, so
+    the event-driven multiport schedule and a single dense matmul produce
+    identical V_mem / spikes — proven in tests/test_esam_equivalence.py.
+
+    Args:
+      weight_bits: {0,1}[n_in, n_out]
+      in_spikes: bool[..., n_in] (any batch shape)
+    Returns:
+      (out_spikes bool[..., n_out], vmem int32[..., n_out])
+    """
+    w_signed = nrn.decode_bitlines(weight_bits)
+    vmem = jnp.einsum("...i,io->...o", in_spikes.astype(jnp.int32), w_signed)
+    return vmem >= vth, vmem

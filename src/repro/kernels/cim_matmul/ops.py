@@ -1,0 +1,6 @@
+"""Jit'd public wrappers for the CIM MAC kernels."""
+
+from repro.kernels.cim_matmul.kernel import cim_matmul, esam_layer
+from repro.kernels.cim_matmul.ref import cim_matmul_ref, esam_layer_ref
+
+__all__ = ["cim_matmul", "esam_layer", "cim_matmul_ref", "esam_layer_ref"]

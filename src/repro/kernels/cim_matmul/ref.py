@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the CIM binary MAC."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cim_matmul_ref(spikes: jax.Array, weight_bits: jax.Array) -> jax.Array:
+    """V_mem = spikes @ (2*bits - 1).
+
+    Args:
+      spikes: {0,1} (any float/int/bool dtype) [batch, n_in]
+      weight_bits: {0,1} [n_in, n_out]
+    Returns:
+      int32 [batch, n_out]
+    """
+    w = (2 * weight_bits.astype(jnp.int32) - 1)
+    return spikes.astype(jnp.int32) @ w
+
+
+def esam_layer_ref(
+    spikes: jax.Array, weight_bits: jax.Array, vth: jax.Array
+) -> jax.Array:
+    """Fused MAC + IF fire: out spikes = (V_mem >= V_th)."""
+    return (cim_matmul_ref(spikes, weight_bits) >= vth[None, :]).astype(jnp.int8)

@@ -1,0 +1,19 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (VMEM BlockSpecs, MXU-aligned tiles) and are validated
+on CPU via ``interpret=True`` — the kernel body runs in Python with the same
+block schedule, so correctness transfers.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

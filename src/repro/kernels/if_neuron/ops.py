@@ -1,0 +1,6 @@
+"""Jit'd public wrappers for the IF-neuron kernel."""
+
+from repro.kernels.if_neuron.kernel import if_neuron
+from repro.kernels.if_neuron.ref import if_neuron_ref
+
+__all__ = ["if_neuron", "if_neuron_ref"]

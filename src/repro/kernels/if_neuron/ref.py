@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the IF-neuron accumulation kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def if_neuron_ref(updates: jax.Array, vth: jax.Array):
+    """Accumulate T per-cycle contributions, then fire.
+
+    Args:
+      updates: int32[B, T, N] — summed validity-masked port contributions for
+        each of T arbiter rounds (cycles).
+      vth: int32[N]
+    Returns:
+      (spikes int8[B, N], vmem int32[B, N])
+    """
+    vmem = updates.astype(jnp.int32).sum(axis=1)
+    return (vmem >= vth[None, :]).astype(jnp.int8), vmem

@@ -1,0 +1,6 @@
+"""Jit'd public wrappers for the STDP kernel."""
+
+from repro.kernels.stdp.kernel import stdp_update
+from repro.kernels.stdp.ref import stdp_update_ref
+
+__all__ = ["stdp_update", "stdp_update_ref"]

@@ -1,0 +1,69 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 100 --ckpt-dir /tmp/ckpt
+
+On a real fleet this binary runs per-host under the usual JAX multi-host
+bootstrap (jax.distributed.initialize from the cluster env); on this CPU
+container it drives the same code path on the local device mesh.  --smoke
+selects the reduced same-family config so the driver is runnable anywhere.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import base as cb
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.train import fault_tolerance as ft
+from repro.train import loop as train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = cb.smoke(args.arch) if args.smoke else cb.get(args.arch)
+    tcfg = train_loop.TrainConfig(
+        lr=args.lr, warmup=min(20, args.steps // 10 + 1), total_steps=args.steps,
+        log_every=max(1, args.steps // 20), checkpoint_every=args.ckpt_every,
+        seed=args.seed,
+    )
+    pipe = TokenPipeline(PipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed,
+        is_encdec=cfg.is_encdec, d_model=cfg.d_model,
+    ))
+    mgr = ft.CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    wd = ft.StragglerWatchdog(
+        on_straggler=lambda s, w, e: print(f"[watchdog] step {s} straggled: "
+                                           f"{w:.2f}s vs EMA {e:.2f}s"))
+
+    def log(step, metrics):
+        print(f"step {step:5d}  loss {metrics['loss']:.4f}  lr {metrics['lr']:.2e}  "
+              f"wall {metrics['wall_s']:.2f}s")
+
+    print(f"training {cfg.name} ({'smoke' if args.smoke else 'full'}) on "
+          f"{len(jax.devices())} device(s)")
+    state, history = train_loop.run(
+        cfg, tcfg, pipe, ckpt_manager=mgr, watchdog=wd, hooks=[log])
+    if mgr:
+        mgr.wait()
+    print(f"done: loss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}; "
+          f"stragglers flagged: {len(wd.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Grouped-query attention with RoPE, KV cache, optional sliding window and
+optional QK-norm (chameleon).  Pure functions over a params dict.
+
+Layouts: activations [B, S, D]; q/k/v [B, S, H, hd]; KV cache [B, S_max, KV, hd].
+TP: q heads sharded over 'model' when divisible (logical axis "act_heads");
+the out-projection is row-parallel — XLA inserts the psum.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+NEG_INF = -2.3819763e38
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, S_max, KV, hd]
+    v: jax.Array          # [B, S_max, KV, hd]
+    length: jax.Array     # int32[] — tokens currently in the cache
+
+
+def attn_specs(cfg) -> dict:
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    s = {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv", "head_dim")),
+        "wv": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, cfg.d_model), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = layers.rmsnorm_spec(hd)
+        s["k_norm"] = layers.rmsnorm_spec(hd)
+    return s
+
+
+def _qkv(p, cfg, x, positions):
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(q, "batch", None, "act_heads", None)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"])
+        k = layers.rmsnorm(k, p["k_norm"])
+    if cfg.rope_theta:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v, hd
+
+
+def _sdpa(q, k, v, mask, hd):
+    """q: [B,S,H,hd]; k/v: [B,T,KV,hd]; GQA via head grouping."""
+    b, s, h, _ = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, s, kv, group, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def causal_mask(s: int, window: Optional[int] = None) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= j > i - window
+    return m[None]  # [1, S, S]
+
+
+def self_attention(
+    p: dict,
+    cfg,
+    x: jax.Array,                  # [B, S, D]
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v, hd = _qkv(p, cfg, x, positions)
+    if causal:
+        mask = causal_mask(s, window)
+    else:
+        mask = jnp.ones((1, s, s), bool)
+    out = _sdpa(q, k, v, mask, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(out, "batch", None, "act_embed")
+
+
+def prefill_attention(p, cfg, x, cache: KVCache, *, window=None):
+    """Full-sequence prefill that also fills the KV cache.
+
+    With a sliding window and a ring cache smaller than the prompt, only the
+    last ``window`` tokens are stored, rotated so token t sits at slot
+    t % window — the exact layout decode_attention continues from."""
+    b, s, _ = x.shape
+    s_max = cache.k.shape[1]
+    positions = jnp.arange(s)[None, :]
+    q, k, v, hd = _qkv(p, cfg, x, positions)
+    k_st, v_st = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+    if window and s > s_max:
+        assert s_max == window, (s_max, window)
+        k_tail, v_tail = k_st[:, -window:], v_st[:, -window:]
+        shift = (s - window) % window
+        k_st = jnp.roll(k_tail, shift, axis=1)
+        v_st = jnp.roll(v_tail, shift, axis=1)
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k_st, (0, 0, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v_st, (0, 0, 0, 0))
+    mask = causal_mask(s, window)
+    out = _sdpa(q, k, v, mask, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    new_cache = KVCache(k=k_cache, v=v_cache, length=jnp.asarray(s, jnp.int32))
+    return constrain(out, "batch", None, "act_embed"), new_cache
+
+
+def decode_attention(p, cfg, x, cache: KVCache, *, window=None):
+    """One-token decode step against the KV cache.
+
+    x: [B, 1, D].  The cache holds ``cache.length`` valid tokens; the new
+    token is written at position ``length`` (ring-buffered when a sliding
+    window is active — the window case sizes the cache to the window).
+    """
+    b, one, _ = x.shape
+    s_max = cache.k.shape[1]
+    pos = cache.length
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v, hd = _qkv(p, cfg, x, positions)
+    slot = (pos % s_max) if window else pos
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+    # valid slots: the first length+1 (linear cache), or the whole ring once
+    # it has wrapped (window case — cache is sized to the window)
+    j = jnp.arange(s_max)                                    # [S]
+    valid = j < jnp.minimum(pos + 1, s_max) if window else j < pos + 1
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, s_max))
+    out = _sdpa(q, k_cache, v_cache, mask, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    new_cache = KVCache(k=k_cache, v=v_cache, length=pos + 1)
+    return constrain(out, "batch", None, "act_embed"), new_cache
+
+
+def cross_attention_specs(cfg) -> dict:
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    return {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv", "head_dim")),
+        "wv": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, cfg.d_model), ("heads", "head_dim", "embed")),
+    }
+
+
+def cross_attention(p, cfg, x, memory, memory_kv=None):
+    """Decoder cross-attention.  memory: [B, T, D] encoder output; if
+    memory_kv (precomputed K/V of the memory) is given, reuse it."""
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = constrain(q, "batch", None, "act_heads", None)
+    if memory_kv is None:
+        k = jnp.einsum("btd,dhk->bthk", memory, p["wk"])
+        v = jnp.einsum("btd,dhk->bthk", memory, p["wv"])
+    else:
+        k, v = memory_kv
+    b, s = q.shape[0], q.shape[1]
+    mask = jnp.ones((1, s, k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(out, "batch", None, "act_embed")
+
+
+def init_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    shape = (batch, s_max, cfg.n_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_axes() -> KVCache:
+    """Logical axes for the cache pytree (for dry-run shardings)."""
+    ax = ("cache_batch", "cache_seq", "cache_kv", "head_dim")
+    return KVCache(k=ax, v=ax, length=())

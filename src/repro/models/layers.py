@@ -1,0 +1,97 @@
+"""Shared layer primitives: norms, embeddings, RoPE, projections."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+def rmsnorm_spec(dim: int) -> ParamSpec:
+    return ParamSpec((dim,), ("act_embed",), init="ones", dtype=jnp.float32)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # NOTE (EXPERIMENTS §Perf/HC4 iter2): a custom_vjp variant emitting bf16
+    # dx was tried to narrow the TP all-reduces of the residual-stream
+    # cotangent.  It changed nothing on the targeted cell (the wide ARs are
+    # forward psums XLA places before the dot's output convert) and it
+    # REGRESSED the pure-DP sLSTM cell 200x — with bf16 cotangents XLA moved
+    # the recurrent-weight grad psum inside the 4096-step time scan.
+    # Reverted; the interaction is recorded in EXPERIMENTS.md.
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight
+    return out.astype(x.dtype)
+
+
+def layernorm_specs(dim: int) -> dict:
+    return {
+        "scale": ParamSpec((dim,), ("act_embed",), init="ones", dtype=jnp.float32),
+        "bias": ParamSpec((dim,), ("act_embed",), init="zeros", dtype=jnp.float32),
+    }
+
+
+def layernorm(x: jax.Array, p: dict, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def embed_spec(vocab: int, dim: int, tied: bool = False) -> ParamSpec:
+    """Token-embedding table, sharded over vocab (row-parallel unembed).
+
+    §Perf/HC2 iter3 (refuted): sharding untied lookup tables over the
+    *embedding dim* instead would avoid the involuntary-full-remat warning the
+    vocab-sharded gather triggers in XLA SPMD — but the partitioner currently
+    miscompiles a dim-sharded gather under the layer scan (HLO verifier:
+    "Slice dim size 7168 greater than dynamic slice dimension: 448"), so the
+    vocab-sharded layout stays until Shardy lands (XLA b/433785288)."""
+    del tied
+    return ParamSpec((vocab, dim), ("vocab", "embed"), init="scaled", scale=0.02)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits projection (tied or untied table [V, D])."""
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+# ------------------------------------------------------------------ #
+# RoPE
+# ------------------------------------------------------------------ #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..., S, hd/2]
+    cos, sin = jnp.cos(angles)[..., None, :], jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_spec(
+    d_in: int, d_out: int, axes: tuple, scale: Optional[float] = None
+) -> ParamSpec:
+    return ParamSpec((d_in, d_out), axes, init="scaled", scale=scale)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return jax.nn.silu(x)

@@ -1,0 +1,534 @@
+"""Unified language model: specs + train/prefill/decode entry points for every
+assigned architecture family.
+
+Layer stacks use ``jax.lax.scan`` over stacked parameters (compile-time and
+HLO-size critical for the 61-layer/384-expert configs); activation
+checkpointing wraps the scan body.  Family dispatch:
+
+  dense / vlm      pre-norm GQA attn + SwiGLU MLP                   (scan)
+  moe              pre-norm GQA attn + MoE FFN                      (scan)
+  hybrid (zamba2)  groups of ``shared_attn_period`` Mamba2 blocks,
+                   one *shared-weight* attn+MLP block after each    (scan over
+                   group; inner scan over the group's mamba layers)
+  xlstm            mLSTM blocks with sLSTM at cfg.slstm_layers      (unrolled;
+                   12 layers, HLO stays small)
+  encdec           bidirectional encoder + causal decoder w/ cross-attn
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import layers, mlp, moe, params as pm, ssm, xlstm
+from repro.models.params import ParamSpec
+
+
+# --------------------------------------------------------------------- #
+# spec helpers
+# --------------------------------------------------------------------- #
+def _stack_specs(n: int, specs):
+    """Prepend a scan-stacked 'layers' dim to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype),
+        specs,
+        is_leaf=pm.is_spec,
+    )
+
+
+def _block_specs(cfg) -> dict:
+    """One standard transformer block (attn + ffn + norms)."""
+    s = {
+        "ln_attn": layers.rmsnorm_spec(cfg.d_model),
+        "attn": attn.attn_specs(cfg),
+        "ln_ffn": layers.rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        s["ffn"] = moe.moe_specs(cfg)
+    else:
+        s["ffn"] = mlp.mlp_specs(cfg.d_model, cfg.d_ff)
+    return s
+
+
+def model_specs(cfg) -> dict:
+    specs: dict[str, Any] = {
+        "embed": layers.embed_spec(cfg.vocab_size, cfg.d_model, cfg.tied_embeddings),
+        "ln_f": layers.rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tied_embeddings:
+        specs["unembed"] = ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="scaled", scale=0.02
+        )
+    if cfg.family in ("dense", "vlm", "moe"):
+        specs["blocks"] = _stack_specs(cfg.n_layers, _block_specs(cfg))
+    elif cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        assert cfg.n_layers % period == 0
+        groups = cfg.n_layers // period
+        mamba_layer = {"pre_ln": layers.rmsnorm_spec(cfg.d_model),
+                       "mamba": ssm.mamba_specs(cfg)}
+        specs["mamba"] = _stack_specs(groups, _stack_specs(period, mamba_layer))
+        specs["shared"] = _block_specs(dataclasses.replace(cfg, family="dense"))
+    elif cfg.family == "xlstm":
+        blocks = []
+        for i in range(cfg.n_layers):
+            if i in cfg.slstm_layers:
+                blocks.append({"kind_slstm": xlstm.slstm_specs(cfg),
+                               "ln": layers.rmsnorm_spec(cfg.d_model)})
+            else:
+                blocks.append({"kind_mlstm": xlstm.mlstm_specs(cfg),
+                               "ln": layers.rmsnorm_spec(cfg.d_model)})
+        specs["blocks"] = blocks
+    elif cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        enc_block = {
+            "ln_attn": layers.rmsnorm_spec(cfg.d_model),
+            "attn": attn.attn_specs(enc_cfg),
+            "ln_ffn": layers.rmsnorm_spec(cfg.d_model),
+            "ffn": mlp.mlp_specs(cfg.d_model, cfg.d_ff),
+        }
+        dec_block = dict(enc_block)
+        dec_block["ln_cross"] = layers.rmsnorm_spec(cfg.d_model)
+        dec_block["cross"] = attn.cross_attention_specs(enc_cfg)
+        specs["encoder"] = _stack_specs(cfg.enc_layers, enc_block)
+        specs["decoder"] = _stack_specs(cfg.dec_layers, dec_block)
+        # audio frontend is a stub: inputs arrive as precomputed frame
+        # embeddings (DESIGN.md §4); only a projection is learned here.
+        specs["frontend_proj"] = ParamSpec((cfg.d_model, cfg.d_model), ("embed", "embed"))
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+# --------------------------------------------------------------------- #
+# block applications
+# --------------------------------------------------------------------- #
+def _remat_wrap(cfg, fn):
+    """Wrap a scan body / block fn with the configured remat policy."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:  # "full"
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _apply_block(bp, cfg, x, *, window=None):
+    h = attn.self_attention(bp["attn"], cfg, layers.rmsnorm(x, bp["ln_attn"]),
+                            causal=True, window=window)
+    x = x + h
+    ffn_in = layers.rmsnorm(x, bp["ln_ffn"])
+    if cfg.family == "moe":
+        x = x + moe.moe_ffn(bp["ffn"], cfg, ffn_in)
+    else:
+        x = x + mlp.mlp(bp["ffn"], ffn_in)
+    return x
+
+
+def _scan_blocks(stacked, cfg, x, *, window=None):
+    def body(carry, bp):
+        y = _apply_block(bp, cfg, carry, window=window)
+        return y, None
+
+    x, _ = jax.lax.scan(_remat_wrap(cfg, body), x, stacked)
+    return x
+
+
+def _hybrid_forward(p, cfg, x, *, window=None):
+    def group_body(carry, gp):
+        def mamba_body(c, lp):
+            return c + ssm.mamba_block(lp["mamba"], cfg,
+                                       layers.rmsnorm(c, lp["pre_ln"])), None
+
+        y, _ = jax.lax.scan(mamba_body, carry, gp)
+        y = _apply_block(p["shared"], cfg, y, window=window)   # shared weights
+        return y, None
+
+    x, _ = jax.lax.scan(_remat_wrap(cfg, group_body), x, p["mamba"])
+    return x
+
+
+def _xlstm_forward(p, cfg, x):
+    def one_block(bp, h_in):
+        h = layers.rmsnorm(h_in, bp["ln"])
+        if "kind_slstm" in bp:
+            return h_in + xlstm.slstm_block(bp["kind_slstm"], cfg, h)
+        return h_in + xlstm.mlstm_block(bp["kind_mlstm"], cfg, h)
+
+    one_block = _remat_wrap(cfg, one_block)
+    for bp in p["blocks"]:
+        x = one_block(bp, x)
+    return x
+
+
+# --------------------------------------------------------------------- #
+# top-level entry points
+# --------------------------------------------------------------------- #
+def _embed_in(params, cfg, tokens):
+    x = layers.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    return constrain(x, "batch", None, "act_embed")
+
+
+def _logits_out(params, cfg, x):
+    x = layers.rmsnorm(x, params["ln_f"])
+    table = params["embed"] if cfg.tied_embeddings else params["unembed"]
+    logits = layers.unembed(x, table)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def forward_train(params, cfg, batch) -> jax.Array:
+    """Teacher-forced logits. batch: {'tokens': [B,S]} (+ 'src_frames' for
+    encdec audio: [B, S_src, D] precomputed frame embeddings)."""
+    if cfg.is_encdec:
+        return _encdec_forward(params, cfg, batch)
+    x = _embed_in(params, cfg, batch["tokens"])
+    window = cfg.window if (cfg.window and batch["tokens"].shape[1] > cfg.window) else None
+    if cfg.family in ("dense", "vlm", "moe"):
+        x = _scan_blocks(params["blocks"], cfg, x, window=window)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, cfg, x, window=window)
+    elif cfg.family == "xlstm":
+        x = _xlstm_forward(params, cfg, x)
+    else:
+        raise ValueError(cfg.family)
+    return _logits_out(params, cfg, x)
+
+
+def _encdec_forward(params, cfg, batch):
+    frames = batch["src_frames"].astype(jnp.bfloat16)          # [B, S_src, D] stub
+    mem = jnp.einsum("bsd,de->bse", frames, params["frontend_proj"])
+    mem = constrain(mem, "batch", None, "act_embed")
+
+    def enc_body(carry, bp):
+        h = attn.self_attention(bp["attn"], cfg, layers.rmsnorm(carry, bp["ln_attn"]),
+                                causal=False)
+        y = carry + h
+        y = y + mlp.mlp(bp["ffn"], layers.rmsnorm(y, bp["ln_ffn"]))
+        return y, None
+
+    def dec_body(carry, bp):
+        h = attn.self_attention(bp["attn"], cfg, layers.rmsnorm(carry, bp["ln_attn"]),
+                                causal=True)
+        y = carry + h
+        y = y + attn.cross_attention(bp["cross"], cfg, layers.rmsnorm(y, bp["ln_cross"]), mem)
+        y = y + mlp.mlp(bp["ffn"], layers.rmsnorm(y, bp["ln_ffn"]))
+        return y, None
+
+    enc_body = _remat_wrap(cfg, enc_body)
+    dec_body = _remat_wrap(cfg, dec_body)
+    mem, _ = jax.lax.scan(enc_body, mem, params["encoder"])
+    x = _embed_in(params, cfg, batch["tokens"])
+    x, _ = jax.lax.scan(dec_body, x, params["decoder"])
+    return _logits_out(params, cfg, x)
+
+
+def loss_fn(params, cfg, batch) -> jax.Array:
+    logits = forward_train(params, cfg, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ===================================================================== #
+# Serving: prefill + single-token decode with per-family caches
+# ===================================================================== #
+class Caches(NamedTuple):
+    """Family-polymorphic cache container (unused fields are () placeholders)."""
+
+    attn: Any = ()      # stacked KVCache [L, ...]        (dense/moe/vlm; encdec dec self)
+    cross: Any = ()     # (k, v) stacked [L, B, T, KV, hd] (encdec)
+    mamba: Any = ()     # stacked MambaCache [G, P, ...]   (hybrid)
+    shared: Any = ()    # stacked KVCache [G, ...]         (hybrid shared blocks)
+    xl: Any = ()        # tuple of per-block caches        (xlstm)
+
+
+def _decode_window(cfg, s_max: int):
+    """Sliding window active for long-context decode on windowed archs."""
+    if cfg.window and s_max > cfg.window:
+        return cfg.window
+    return None
+
+
+def init_caches(cfg, batch: int, s_max: int, src_len: Optional[int] = None) -> Caches:
+    if cfg.family in ("dense", "vlm", "moe"):
+        win = _decode_window(cfg, s_max)
+        c = attn.init_cache(cfg, batch, min(s_max, win or s_max))
+        stacked = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), c)
+        return Caches(attn=attn.KVCache(*stacked))
+    if cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        groups = cfg.n_layers // period
+        mc = ssm.init_mamba_cache(cfg, batch)
+        mstack = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (groups, period) + a.shape), mc)
+        win = _decode_window(cfg, s_max)
+        sc = attn.init_cache(cfg, batch, min(s_max, win or s_max))
+        sstack = jax.tree.map(lambda a: jnp.broadcast_to(a, (groups,) + a.shape), sc)
+        return Caches(mamba=ssm.MambaCache(*mstack), shared=attn.KVCache(*sstack))
+    if cfg.family == "xlstm":
+        xl = []
+        for i in range(cfg.n_layers):
+            if i in cfg.slstm_layers:
+                xl.append(xlstm.init_slstm_cache(cfg, batch))
+            else:
+                xl.append(xlstm.init_mlstm_cache(cfg, batch))
+        return Caches(xl=tuple(xl))
+    if cfg.family == "encdec":
+        # s_max = decoder (target) cache capacity; src_len = encoder memory len
+        src = src_len if src_len is not None else s_max
+        c = attn.init_cache(cfg, batch, s_max)
+        stacked = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape), c)
+        hd = cfg.hd
+        cross_k = jnp.zeros((cfg.dec_layers, batch, src, cfg.n_kv_heads, hd), jnp.bfloat16)
+        return Caches(attn=attn.KVCache(*stacked), cross=(cross_k, cross_k))
+    raise ValueError(cfg.family)
+
+
+def cache_axes(cfg) -> Caches:
+    """Logical-axis tree matching init_caches (leading 'layers'/group dims)."""
+    def stack(ax_tuple, extra=1):
+        return tuple(("layers",) * extra) + ax_tuple if isinstance(ax_tuple, tuple) else ax_tuple
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        base = attn.cache_axes()
+        return Caches(attn=attn.KVCache(
+            k=("layers",) + base.k, v=("layers",) + base.v, length=()))
+    if cfg.family == "hybrid":
+        mb = ssm.mamba_cache_axes()
+        mstack = ssm.MambaCache(
+            ssm=("layers", "layers") + mb.ssm,
+            conv=("layers", "layers") + mb.conv, length=())
+        base = attn.cache_axes()
+        sstack = attn.KVCache(k=("layers",) + base.k, v=("layers",) + base.v, length=())
+        return Caches(mamba=mstack, shared=sstack)
+    if cfg.family == "xlstm":
+        xl = []
+        for i in range(cfg.n_layers):
+            xl.append(xlstm.slstm_cache_axes() if i in cfg.slstm_layers
+                      else xlstm.mlstm_cache_axes())
+        return Caches(xl=tuple(xl))
+    if cfg.family == "encdec":
+        base = attn.cache_axes()
+        ax = ("layers", "cache_batch", "cache_seq", "cache_kv", "head_dim")
+        return Caches(attn=attn.KVCache(k=("layers",) + base.k, v=("layers",) + base.v,
+                                        length=()), cross=(ax, ax))
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg, batch, cache_len: Optional[int] = None) -> tuple[jax.Array, Caches]:
+    """Run the full prompt; returns (last-token logits [B, V], filled caches).
+
+    cache_len: KV-cache capacity (>= prompt length); pass prompt + max_new
+    when the caches will be decoded into afterwards."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    capacity = max(s, cache_len or s)
+    src_len = batch["src_frames"].shape[1] if cfg.is_encdec else None
+    caches = init_caches(cfg, b, capacity, src_len=src_len)
+    win = cfg.window if (cfg.window and s > cfg.window) else None
+    if cfg.family in ("dense", "vlm", "moe"):
+        x = _embed_in(params, cfg, tokens)
+
+        def body(carry, xs):
+            bp, cache_l = xs
+            h, new_c = attn.prefill_attention(
+                bp["attn"], cfg, layers.rmsnorm(carry, bp["ln_attn"]), cache_l, window=win)
+            y = carry + h
+            ffn_in = layers.rmsnorm(y, bp["ln_ffn"])
+            if cfg.family == "moe":
+                y = y + moe.moe_ffn(bp["ffn"], cfg, ffn_in)
+            else:
+                y = y + mlp.mlp(bp["ffn"], ffn_in)
+            return y, new_c
+
+        x, new_attn = jax.lax.scan(body, x, (params["blocks"], caches.attn))
+        logits = _logits_out(params, cfg, x[:, -1:, :])[:, 0]
+        return logits, Caches(attn=new_attn)
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(params, cfg, tokens, caches, win)
+    if cfg.family == "xlstm":
+        return _xlstm_prefill(params, cfg, tokens, caches)
+    if cfg.family == "encdec":
+        return _encdec_prefill(params, cfg, batch, caches)
+    raise ValueError(cfg.family)
+
+
+def _hybrid_prefill(params, cfg, tokens, caches, win):
+    x = _embed_in(params, cfg, tokens)
+    b, s = tokens.shape
+
+    def group_body(carry, xs):
+        gp, mcache_g, scache_g = xs
+
+        def mamba_body(c, xs2):
+            lp, mcache_l = xs2
+            h = layers.rmsnorm(c, lp["pre_ln"])
+            # prefill = run the chunked form AND capture the final state
+            out, final_state = _mamba_prefill_block(lp["mamba"], cfg, h)
+            new_cache = ssm.MambaCache(
+                ssm=final_state[0], conv=final_state[1],
+                length=jnp.asarray(s, jnp.int32))
+            return c + out, new_cache
+
+        y, new_mcaches = jax.lax.scan(mamba_body, carry, (gp, mcache_g))
+        h, new_scache = attn.prefill_attention(
+            params["shared"]["attn"], cfg,
+            layers.rmsnorm(y, params["shared"]["ln_attn"]), scache_g, window=win)
+        y = y + h
+        y = y + mlp.mlp(params["shared"]["ffn"], layers.rmsnorm(y, params["shared"]["ln_ffn"]))
+        return y, (new_mcaches, new_scache)
+
+    x, (new_m, new_s) = jax.lax.scan(group_body, x, (params["mamba"], caches.mamba, caches.shared))
+    logits = _logits_out(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, Caches(mamba=new_m, shared=new_s)
+
+
+def _mamba_prefill_block(p, cfg, x, chunk: int = 128):
+    """Mamba block that also returns (final ssm state, final conv window)."""
+    b, s, d = x.shape
+    d_inner, h, conv_dim = ssm.dims(cfg)
+    n = cfg.ssm_state
+    z, xs_, B, C, dt_raw, xbc_raw = ssm._project(p, cfg, x, return_raw=True)
+    conv_tail = xbc_raw[:, -(ssm.CONV_K - 1):, :]              # final conv window
+    xs_ = xs_.reshape(b, s, h, ssm.HEADDIM)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_last = ssm._ssd_chunked(xs_, dt, A, B.astype(jnp.float32), C.astype(jnp.float32), chunk)
+    y = y + xs_.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    # h_last: [B,H,N,P] — already the MambaCache layout
+    return constrain(out, "batch", None, "act_embed"), (h_last, conv_tail)
+
+
+def _xlstm_prefill(params, cfg, tokens, caches):
+    """Chunkwise prefill with exact recurrent-state capture per block."""
+    x = _embed_in(params, cfg, tokens)
+    b, s, _ = x.shape
+    length = jnp.asarray(s, jnp.int32)
+    new_caches = list(caches.xl)
+    for i, bp in enumerate(params["blocks"]):
+        h = layers.rmsnorm(x, bp["ln"])
+        if "kind_slstm" in bp:
+            out, (c, n, hst, m) = xlstm.slstm_block(bp["kind_slstm"], cfg, h,
+                                                    return_state=True)
+            new_caches[i] = xlstm.SLstmCache(c=c, n=n, h=hst, m=m, length=length)
+        else:
+            out, (C, n, m) = xlstm.mlstm_block(bp["kind_mlstm"], cfg, h,
+                                               return_state=True)
+            new_caches[i] = xlstm.MLstmCache(C=C, n=n, m=m, length=length)
+        x = x + out
+    logits = _logits_out(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, Caches(xl=tuple(new_caches))
+
+
+def _encdec_prefill(params, cfg, batch, caches):
+    frames = batch["src_frames"].astype(jnp.bfloat16)
+    mem = jnp.einsum("bsd,de->bse", frames, params["frontend_proj"])
+
+    def enc_body(carry, bp):
+        h = attn.self_attention(bp["attn"], cfg, layers.rmsnorm(carry, bp["ln_attn"]),
+                                causal=False)
+        y = carry + h
+        y = y + mlp.mlp(bp["ffn"], layers.rmsnorm(y, bp["ln_ffn"]))
+        return y, None
+
+    mem, _ = jax.lax.scan(enc_body, mem, params["encoder"])
+    x = _embed_in(params, cfg, batch["tokens"])
+
+    def dec_body(carry, xs):
+        bp, cache_l = xs
+        h, new_c = attn.prefill_attention(
+            bp["attn"], cfg, layers.rmsnorm(carry, bp["ln_attn"]), cache_l)
+        y = carry + h
+        ck = jnp.einsum("btd,dhk->bthk", mem, bp["cross"]["wk"]).astype(jnp.bfloat16)
+        cv = jnp.einsum("btd,dhk->bthk", mem, bp["cross"]["wv"]).astype(jnp.bfloat16)
+        y = y + attn.cross_attention(bp["cross"], cfg, layers.rmsnorm(y, bp["ln_cross"]),
+                                     mem, memory_kv=(ck, cv))
+        y = y + mlp.mlp(bp["ffn"], layers.rmsnorm(y, bp["ln_ffn"]))
+        return y, (new_c, ck, cv)
+
+    x, (new_attn, cks, cvs) = jax.lax.scan(dec_body, x, (params["decoder"], caches.attn))
+    logits = _logits_out(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, Caches(attn=new_attn, cross=(cks, cvs))
+
+
+def decode_step(params, cfg, tokens, caches: Caches) -> tuple[jax.Array, Caches]:
+    """One new token per sequence. tokens: [B, 1] -> (logits [B, V], caches)."""
+    x = _embed_in(params, cfg, tokens)
+    if cfg.family in ("dense", "vlm", "moe"):
+        win = _decode_window(cfg, int(caches.attn.k.shape[2]) + 1) if cfg.window else None
+
+        def body(carry, xs):
+            bp, cache_l = xs
+            h, new_c = attn.decode_attention(
+                bp["attn"], cfg, layers.rmsnorm(carry, bp["ln_attn"]), cache_l,
+                window=cfg.window if cfg.window else None)
+            y = carry + h
+            ffn_in = layers.rmsnorm(y, bp["ln_ffn"])
+            if cfg.family == "moe":
+                y = y + moe.moe_ffn(bp["ffn"], cfg, ffn_in)
+            else:
+                y = y + mlp.mlp(bp["ffn"], ffn_in)
+            return y, new_c
+
+        x, new_attn = jax.lax.scan(body, x, (params["blocks"], caches.attn))
+        return _logits_out(params, cfg, x)[:, 0], Caches(attn=new_attn)
+    if cfg.family == "hybrid":
+        def group_body(carry, xs):
+            gp, mcache_g, scache_g = xs
+
+            def mamba_body(c, xs2):
+                lp, mcache_l = xs2
+                h = layers.rmsnorm(c, lp["pre_ln"])
+                out, new_c = ssm.mamba_decode_step(lp["mamba"], cfg, h, mcache_l)
+                return c + out, new_c
+
+            y, new_m = jax.lax.scan(mamba_body, carry, (gp, mcache_g))
+            h, new_s = attn.decode_attention(
+                params["shared"]["attn"], cfg,
+                layers.rmsnorm(y, params["shared"]["ln_attn"]), scache_g,
+                window=cfg.window)
+            y = y + h
+            y = y + mlp.mlp(params["shared"]["ffn"],
+                            layers.rmsnorm(y, params["shared"]["ln_ffn"]))
+            return y, (new_m, new_s)
+
+        x, (new_m, new_s) = jax.lax.scan(
+            group_body, x, (params["mamba"], caches.mamba, caches.shared))
+        return _logits_out(params, cfg, x)[:, 0], Caches(mamba=new_m, shared=new_s)
+    if cfg.family == "xlstm":
+        new_caches = list(caches.xl)
+        for i, bp in enumerate(params["blocks"]):
+            h = layers.rmsnorm(x, bp["ln"])
+            if "kind_slstm" in bp:
+                out, new_caches[i] = xlstm.slstm_decode_step(bp["kind_slstm"], cfg, h, caches.xl[i])
+            else:
+                out, new_caches[i] = xlstm.mlstm_decode_step(bp["kind_mlstm"], cfg, h, caches.xl[i])
+            x = x + out
+        return _logits_out(params, cfg, x)[:, 0], Caches(xl=tuple(new_caches))
+    if cfg.family == "encdec":
+        def dec_body(carry, xs):
+            bp, cache_l, ck, cv = xs
+            h, new_c = attn.decode_attention(
+                bp["attn"], cfg, layers.rmsnorm(carry, bp["ln_attn"]), cache_l)
+            y = carry + h
+            y = y + attn.cross_attention(bp["cross"], cfg,
+                                         layers.rmsnorm(y, bp["ln_cross"]),
+                                         None, memory_kv=(ck, cv))
+            y = y + mlp.mlp(bp["ffn"], layers.rmsnorm(y, bp["ln_ffn"]))
+            return y, new_c
+
+        cks, cvs = caches.cross
+        x, new_attn = jax.lax.scan(dec_body, x, (params["decoder"], caches.attn, cks, cvs))
+        return _logits_out(params, cfg, x)[:, 0], Caches(attn=new_attn, cross=caches.cross)
+    raise ValueError(cfg.family)

@@ -1,0 +1,32 @@
+"""Dense MLP blocks (SwiGLU / GELU), tensor-parallel over the 'model' axis."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+
+def mlp_specs(d_model: int, d_ff: int, *, gated: bool = True) -> dict:
+    s = {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((d_model, d_ff), ("embed", "mlp"))
+    return s
+
+
+def mlp(p: dict, x: jax.Array, *, gated: bool = True) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    up = constrain(up, "batch", None, "act_mlp")
+    if gated:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = layers.silu(gate) * up
+    else:
+        h = layers.gelu(up)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(out, "batch", None, "act_embed")

@@ -1,0 +1,355 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, true recurrence).  Beck et al. 2024 (arXiv:2405.04517), simplified to
+the components the assigned 125M config exercises.
+
+mLSTM state per head: C [P, P] matrix memory, n [P] normalizer, m stabilizer.
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  y_t = (C_t q_t) / max(|n_t.q_t|, 1)
+with exponential input gates stabilized by m_t = max(log f_t + m_{t-1}, log i_t).
+Decode is O(P^2) per head per token — long_500k state is constant-size, which
+is what qualifies xlstm for the long-context shape.
+
+sLSTM: per-unit scalar memory with recurrent weights — a genuine sequential
+scan over time (kept on a small subset of layers, as in the paper).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+
+class MLstmCache(NamedTuple):
+    C: jax.Array       # [B, H, P, P]
+    n: jax.Array       # [B, H, P]
+    m: jax.Array       # [B, H]
+    length: jax.Array
+
+
+class SLstmCache(NamedTuple):
+    c: jax.Array       # [B, D]
+    n: jax.Array       # [B, D]
+    h: jax.Array       # [B, D]
+    m: jax.Array       # [B, D]
+    length: jax.Array
+
+
+# ------------------------------------------------------------------ #
+# mLSTM
+# ------------------------------------------------------------------ #
+def mlstm_specs(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    up = 2 * d
+    p = up // h           # heads operate in the up-projected space
+    return {
+        "w_up": ParamSpec((d, up), ("embed", "mlp")),          # pre-up-projection
+        "w_qkv": ParamSpec((up, 3, h, p), (None, None, "heads", "head_dim")),
+        "w_if": ParamSpec((up, 2, h), (None, None, "heads"), dtype=jnp.float32),
+        "b_if": ParamSpec((2, h), (None, "heads"), init="zeros", dtype=jnp.float32),
+        "w_o": ParamSpec((up, up), (None, "mlp")),             # output gate
+        "norm": layers.rmsnorm_spec(up),
+        "w_down": ParamSpec((up, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_chunked(q, k, v, logf, logi, chunk: int, quad_dtype=jnp.float32):
+    """Chunkwise-parallel mLSTM.  q/k/v: [B,S,H,P]; logf/logi: [B,S,H].
+
+    quad_dtype: operand dtype for the O(L^2) intra-chunk einsums and the
+    [H,P,P] chunk-state einsums (accumulation always f32).  HC1 iter3/4 set
+    this to bf16 — the gate/stabilizer math stays f32 either way."""
+    b, s, h, p = q.shape
+    L = min(chunk, s)
+    nc = s // L
+    qc = q.reshape(b, nc, L, h, p)
+    kc = k.reshape(b, nc, L, h, p)
+    vc = v.reshape(b, nc, L, h, p)
+    lf = logf.reshape(b, nc, L, h).astype(jnp.float32)
+    li = logi.reshape(b, nc, L, h).astype(jnp.float32)
+    cumf = jnp.cumsum(lf, axis=2)                          # [B,nc,L,H]
+
+    # intra-chunk attention-like term with stabilized gates:
+    # w[i,j] = exp(cumf_i - cumf_j + li_j - m_i),   i >= j
+    log_w = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + li[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    log_w = jnp.where(mask, log_w, -jnp.inf)
+    # chunk-local stabilizer (max over j), combined with carried state below
+    m_intra = jnp.max(log_w, axis=3)                        # [B,nc,L,H]
+    # inter-chunk: log weight of carried state at step i = cumf_i (+ m_carry)
+    # stabilize jointly:
+    m_tot = jnp.maximum(m_intra, cumf)                      # [B,nc,L,H]
+    w = jnp.exp(log_w - m_tot[:, :, :, None, :])            # [B,nc,L,L,H]
+    scale = 1.0 / jnp.sqrt(p)
+    # §Perf/HC1 iter3: the O(L^2) intra-chunk tensors dominate HBM traffic —
+    # run the quadratic einsums on quad_dtype operands (f32 accumulation),
+    # keeping the gate/stabilizer math in f32.
+    qk = jnp.einsum("bcihp,bcjhp->bcijh", qc.astype(quad_dtype),
+                    kc.astype(quad_dtype),
+                    preferred_element_type=jnp.float32) * scale
+    wqk = (w * qk).astype(quad_dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", wqk, vc.astype(quad_dtype),
+                         preferred_element_type=jnp.float32)
+    n_intra = (w * qk).sum(axis=3)                          # [B,nc,L,H]
+    # --- chunk summaries for the recurrence ---
+    # §Perf/HC1 iter4: the [B,nc,H,P,P] chunk states are the real HBM hog
+    # (P=384 matrix memory per head) — build them from quad_dtype operands
+    # with f32 accumulation; larger chunks (fewer states) come from the config.
+    w_end = jnp.exp(cumf[:, :, -1:, :] - cumf + li)          # [B,nc,L,H]
+    wk = (w_end[..., None] * kc.astype(jnp.float32)).astype(quad_dtype)
+    Ck = jnp.einsum("bcjhp,bcjhq->bchpq", wk, vc.astype(quad_dtype),
+                    preferred_element_type=jnp.float32)
+    nk = jnp.einsum("bcjh,bcjhp->bchp", w_end, kc.astype(jnp.float32))
+    chunk_f = cumf[:, :, -1, :]                              # [B,nc,H] log decay
+
+    def scan_fn(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        Cc_, nc_, f_ = inp                                   # [B,H,P,P],[B,H,P],[B,H]
+        m_new = jnp.maximum(f_ + m_prev, 0.0)                # new-state log-max (chunk terms stabilized at 0)
+        C_new = jnp.exp(f_ + m_prev - m_new)[..., None, None] * C_prev + \
+                jnp.exp(-m_new)[..., None, None] * Cc_
+        n_new = jnp.exp(f_ + m_prev - m_new)[..., None] * n_prev + \
+                jnp.exp(-m_new)[..., None] * nc_
+        return (C_new, n_new, m_new), (C_prev, n_prev, m_prev)
+
+    zeroC = jnp.zeros((b, h, p, p), jnp.float32)
+    zeron = jnp.zeros((b, h, p), jnp.float32)
+    zerom = jnp.full((b, h), -jnp.inf, jnp.float32)
+    # m carry starts at -inf => exp(-inf)=0 contribution from the empty state
+    _, (C_hist, n_hist, m_hist) = jax.lax.scan(
+        scan_fn, (zeroC, zeron, zerom),
+        (Ck.swapaxes(0, 1), nk.swapaxes(0, 1), chunk_f.swapaxes(0, 1)),
+    )
+    C_hist = C_hist.swapaxes(0, 1)                           # [B,nc,H,P,P] state before chunk
+    n_hist = n_hist.swapaxes(0, 1)
+    m_hist = m_hist.swapaxes(0, 1)                           # [B,nc,H]
+    # inter-chunk contribution: weight exp(cumf_i + m_carry - m_tot)
+    w_carry = jnp.exp(cumf + m_hist[:, :, None, :] - m_tot)  # [B,nc,L,H]
+    y_inter = jnp.einsum("bcihp,bchpq->bcihq",
+                         (qc.astype(jnp.float32) * scale).astype(quad_dtype),
+                         C_hist.astype(quad_dtype),
+                         preferred_element_type=jnp.float32)
+    n_inter = jnp.einsum("bcihp,bchp->bcih", qc.astype(jnp.float32) * scale, n_hist)
+    y = y_intra + w_carry[..., None] * y_inter
+    n_tot = n_intra + w_carry * n_inter
+    denom = jnp.maximum(jnp.abs(n_tot), jnp.exp(-m_tot))     # [B,nc,L,H]
+    y = y / denom[..., None]
+    return y.reshape(b, s, h, p)
+
+
+def _mlstm_chunked_with_state(q, k, v, logf, logi, chunk: int):
+    """Same as _mlstm_chunked but also returns the exact final (C, n, m)
+    carry in the decode-step convention (C stored = true_C * exp(-m))."""
+    b, s, h, p = q.shape
+    y = _mlstm_chunked(q, k, v, logf, logi, chunk)
+    # recompute the final carry via the same scan (cheap: state-sized)
+    L = min(chunk, s)
+    nc = s // L
+    kc = k.reshape(b, nc, L, h, p)
+    vc = v.reshape(b, nc, L, h, p)
+    lf = logf.reshape(b, nc, L, h).astype(jnp.float32)
+    li = logi.reshape(b, nc, L, h).astype(jnp.float32)
+    cumf = jnp.cumsum(lf, axis=2)
+    w_end = jnp.exp(cumf[:, :, -1:, :] - cumf + li)
+    Ck = jnp.einsum("bcjh,bcjhp,bcjhq->bchpq", w_end, kc.astype(jnp.float32), vc.astype(jnp.float32))
+    nk = jnp.einsum("bcjh,bcjhp->bchp", w_end, kc.astype(jnp.float32))
+    chunk_f = cumf[:, :, -1, :]
+
+    def scan_fn(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        Cc_, nc_, f_ = inp
+        m_new = jnp.maximum(f_ + m_prev, 0.0)
+        C_new = jnp.exp(f_ + m_prev - m_new)[..., None, None] * C_prev + \
+                jnp.exp(-m_new)[..., None, None] * Cc_
+        n_new = jnp.exp(f_ + m_prev - m_new)[..., None] * n_prev + \
+                jnp.exp(-m_new)[..., None] * nc_
+        return (C_new, n_new, m_new), None
+
+    init = (jnp.zeros((b, h, p, p), jnp.float32), jnp.zeros((b, h, p), jnp.float32),
+            jnp.full((b, h), -jnp.inf, jnp.float32))
+    (C_fin, n_fin, m_fin), _ = jax.lax.scan(
+        scan_fn, init, (Ck.swapaxes(0, 1), nk.swapaxes(0, 1), chunk_f.swapaxes(0, 1)))
+    return y, (C_fin, n_fin, m_fin)
+
+
+def mlstm_block(p: dict, cfg, x: jax.Array, *, chunk: int | None = None,
+                return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    chunk = chunk or getattr(cfg, "mlstm_chunk", 64)
+    quad_dtype = jnp.bfloat16 if getattr(cfg, "quad_dtype", "float32") == "bfloat16" \
+        else jnp.float32
+    up = jnp.einsum("bsd,du->bsu", x, p["w_up"])
+    up = constrain(up, "batch", None, "act_mlp")
+    qkv = jnp.einsum("bsu,uthp->btshp", up, p["w_qkv"])      # [B,3,S,H,P]
+    q, k, v = qkv[:, 0], qkv[:, 1], qkv[:, 2]
+    gates = jnp.einsum("bsu,uth->btsh", up.astype(jnp.float32), p["w_if"]) + \
+        p["b_if"][None, :, None, :]
+    logi, logf = gates[:, 0], jax.nn.log_sigmoid(gates[:, 1])
+    if return_state:
+        y, state = _mlstm_chunked_with_state(q, k, v, logf, logi, chunk)
+    else:
+        y = _mlstm_chunked(q, k, v, logf, logi, chunk, quad_dtype)  # [B,S,H,P]
+    y = y.reshape(b, s, -1).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsu,uv->bsv", up, p["w_o"]))
+    y = layers.rmsnorm(y * o, p["norm"])
+    out = jnp.einsum("bsu,ud->bsd", y, p["w_down"])
+    out = constrain(out, "batch", None, "act_embed")
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_decode_step(p: dict, cfg, x: jax.Array, cache: MLstmCache):
+    b, _, d = x.shape
+    h = cfg.n_heads
+    up = jnp.einsum("bsd,du->bsu", x, p["w_up"])[:, 0]
+    qkv = jnp.einsum("bu,uthp->bthp", up, p["w_qkv"])
+    q, k, v = qkv[:, 0], qkv[:, 1], qkv[:, 2]                # [B,H,P]
+    pdim = q.shape[-1]
+    gates = jnp.einsum("bu,uth->bth", up.astype(jnp.float32), p["w_if"]) + p["b_if"][None]
+    logi, logf = gates[:, 0], jax.nn.log_sigmoid(gates[:, 1])
+    m_new = jnp.maximum(logf + cache.m, logi)                # [B,H]
+    wf = jnp.exp(logf + cache.m - m_new)[..., None]
+    wi = jnp.exp(logi - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C_new = wf[..., None] * cache.C + wi[..., None] * (kf[..., :, None] * vf[..., None, :])
+    n_new = wf * cache.n + wi * kf
+    qf = q.astype(jnp.float32) / jnp.sqrt(pdim)
+    y = jnp.einsum("bhp,bhpq->bhq", qf, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n_new)), jnp.exp(-m_new))
+    y = (y / denom[..., None]).reshape(b, -1).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bu,uv->bv", up, p["w_o"]))
+    y = layers.rmsnorm(y * o, p["norm"])
+    out = jnp.einsum("bu,ud->bd", y, p["w_down"])[:, None]
+    return out, MLstmCache(C=C_new, n=n_new, m=m_new, length=cache.length + 1)
+
+
+def init_mlstm_cache(cfg, batch: int) -> MLstmCache:
+    h = cfg.n_heads
+    pdim = 2 * cfg.d_model // h
+    return MLstmCache(
+        C=jnp.zeros((batch, h, pdim, pdim), jnp.float32),
+        n=jnp.zeros((batch, h, pdim), jnp.float32),
+        m=jnp.full((batch, h), -jnp.inf, jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mlstm_cache_axes() -> MLstmCache:
+    return MLstmCache(
+        C=("cache_batch", "act_heads", None, None),
+        n=("cache_batch", "act_heads", None),
+        m=("cache_batch", "act_heads"),
+        length=(),
+    )
+
+
+# ------------------------------------------------------------------ #
+# sLSTM
+# ------------------------------------------------------------------ #
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "w_x": ParamSpec((d, 4, d), ("embed", None, "mlp")),   # i, f, z, o from input
+        "w_h": ParamSpec((d, 4, d), (None, None, "mlp")),      # recurrent
+        "b": ParamSpec((4, d), (None, "mlp"), init="zeros", dtype=jnp.float32),
+        "norm": layers.rmsnorm_spec(d),
+        "w_down": ParamSpec((d, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_step(p, x_t, carry):
+    c, n, hprev, m = carry
+    pre = jnp.einsum("bd,dgk->bgk", x_t, p["w_x"]) + \
+        jnp.einsum("bd,dgk->bgk", hprev.astype(x_t.dtype), p["w_h"])
+    pre = pre.astype(jnp.float32) + p["b"][None]
+    i_, f_, z_, o_ = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    logf = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(logf + m, i_)
+    ig = jnp.exp(i_ - m_new)
+    fg = jnp.exp(logf + m - m_new)
+    c_new = fg * c + ig * jnp.tanh(z_)
+    n_new = fg * n + ig
+    h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def _slstm_block_impl(p: dict, cfg, x: jax.Array, return_state: bool):
+    b, s, d = x.shape
+    zeros = jnp.zeros((b, d), jnp.float32)
+    init = (zeros, zeros, zeros, jnp.full((b, d), -jnp.inf, jnp.float32))
+
+    def step(carry, x_t):
+        new = _slstm_step(p, x_t, carry)
+        return new, new[2]
+
+    final, hs = jax.lax.scan(step, init, x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                    # [B,S,D]
+    y = layers.rmsnorm(y, p["norm"])
+    out = jnp.einsum("bsd,dk->bsk", y, p["w_down"])
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_block(p: dict, cfg, x: jax.Array, *, return_state: bool = False):
+    """True recurrence over time (lax.scan over S).
+
+    §Perf/HC1 iter5: under pjit with batch-sharded x and replicated weights,
+    XLA SPMD places the recurrent-weight grad psum INSIDE the time scan
+    (2 x 9.4 MB x 4096 steps per layer).  Wrapping the block in shard_map
+    pins the replicated-param cotangent reduction to the block boundary —
+    one psum per block instead of one per timestep.  Applied only when the
+    active rules replicate the weights (pure-DP profile); sharded-weight
+    (TP) configs keep the pjit path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import current_rules
+
+    rules = current_rules()
+    replicated = rules is not None and rules.rules.get("mlp") is None
+    if not replicated:
+        out = _slstm_block_impl(p, cfg, x, return_state)
+        if return_state:
+            out, final = out
+            return constrain(out, "batch", None, "act_embed"), final
+        return constrain(out, "batch", None, "act_embed")
+
+    mesh = rules.mesh
+    bspec3 = rules.spec(("batch", None, None))
+    bspec2 = rules.spec(("batch", None))
+    p_specs = jax.tree.map(lambda _: P(), p)
+    out_specs = (bspec3, (bspec2, bspec2, bspec2, bspec2)) if return_state else bspec3
+
+    def inner(p_, x_):
+        return _slstm_block_impl(p_, cfg, x_, return_state)
+
+    return jax.shard_map(
+        inner, mesh=mesh, in_specs=(p_specs, bspec3), out_specs=out_specs,
+        check_vma=False,
+    )(p, x)
+
+
+def slstm_decode_step(p: dict, cfg, x: jax.Array, cache: SLstmCache):
+    carry = (cache.c, cache.n, cache.h, cache.m)
+    c, n, h, m = _slstm_step(p, x[:, 0], carry)
+    y = layers.rmsnorm(h[:, None].astype(x.dtype), p["norm"])
+    out = jnp.einsum("bsd,dk->bsk", y, p["w_down"])
+    return out, SLstmCache(c=c, n=n, h=h, m=m, length=cache.length + 1)
+
+
+def init_slstm_cache(cfg, batch: int) -> SLstmCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLstmCache(c=z, n=z, h=z, m=jnp.full((batch, d), -jnp.inf), length=jnp.zeros((), jnp.int32))
+
+
+def slstm_cache_axes() -> SLstmCache:
+    ax = ("cache_batch", "act_mlp")
+    return SLstmCache(c=ax, n=ax, h=ax, m=ax, length=())

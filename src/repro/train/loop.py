@@ -1,0 +1,186 @@
+"""Training loop: jitted train_step factory with sharded state, plus the
+host-side loop with fault tolerance (checkpoint/restart, straggler watchdog).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import lm, params as pm
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import AdamState, TrainState
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    zero1: bool = True
+    log_every: int = 10
+    checkpoint_every: int = 200
+    seed: int = 0
+
+
+def state_specs(cfg, train_cfg: TrainConfig, rules: Optional[shd.ShardingRules]):
+    """(param_specs, m_specs, v_specs) with ZeRO-1 applied when a mesh is active."""
+    pspecs = lm.model_specs(cfg)
+    data_size = 1
+    if rules is not None:
+        data_size = rules.mesh.shape.get("data", 1)
+    dtype = jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16" else jnp.float32
+    m_specs, v_specs = opt_mod.opt_specs(
+        pspecs, dtype=dtype, data_size=data_size,
+        zero1=train_cfg.zero1 and cfg.zero1, rules=rules
+    )
+    return pspecs, m_specs, v_specs
+
+
+def init_state(cfg, train_cfg: TrainConfig, key: jax.Array) -> TrainState:
+    pspecs, m_specs, v_specs = state_specs(cfg, train_cfg, None)
+    params = pm.init(pspecs, key)
+    zeros = lambda specs: pm.init(specs, key)  # init=zeros for opt specs
+    return TrainState(
+        params=params,
+        opt=AdamState(m=zeros(m_specs), v=zeros(v_specs), step=jnp.zeros((), jnp.int32)),
+    )
+
+
+def make_train_step(cfg, train_cfg: TrainConfig,
+                    rules: Optional[shd.ShardingRules] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).  Pure; jit it with
+    in_shardings derived from state_specs when running on a mesh."""
+
+    state_dtype = jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16" else jnp.float32
+    use_sr = cfg.optimizer_dtype == "bfloat16"
+    mb = max(1, cfg.microbatches)
+
+    def _loss_and_grads(params, batch):
+        if mb == 1:
+            return jax.value_and_grad(lm.loss_fn)(params, cfg, batch)
+
+        # gradient accumulation: scan over microbatches; accumulators live in
+        # the parameter dtype (bf16 for the 1T tier) so peak memory stays at
+        # one microbatch of activations + one grad copy.
+        def split(x):
+            return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+        micro_batches = jax.tree.map(split, batch)
+
+        def micro(carry, mb_batch):
+            acc_loss, acc_g = carry
+            loss_i, g_i = jax.value_and_grad(lm.loss_fn)(params, cfg, mb_batch)
+            acc_g = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc_g, g_i)
+            return (acc_loss + loss_i, acc_g), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (loss_sum, grads), _ = jax.lax.scan(micro, (jnp.zeros(()), zeros), micro_batches)
+        return loss_sum / mb, jax.tree.map(lambda g: g / mb, grads)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        with shd.use_rules(rules):
+            loss, grads = _loss_and_grads(state.params, batch)
+            if cfg.grad_dtype == "bfloat16":
+                # gradient compression for the data-parallel all-reduce
+                grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+            lr = opt_mod.lr_schedule(
+                state.opt.step, peak=train_cfg.lr, warmup=train_cfg.warmup,
+                total=train_cfg.total_steps,
+            )
+            sr_key = (
+                jax.random.fold_in(jax.random.PRNGKey(train_cfg.seed), state.opt.step)
+                if use_sr else None
+            )
+            new_params, new_opt = opt_mod.adamw_update(
+                state.params, grads, state.opt,
+                lr=lr, weight_decay=train_cfg.weight_decay,
+                grad_clip=train_cfg.grad_clip, state_dtype=state_dtype, sr_key=sr_key,
+            )
+            metrics = {"loss": loss, "lr": lr, "step": new_opt.step}
+            return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def batch_shardings(cfg, rules: Optional[shd.ShardingRules]):
+    if rules is None:
+        return None
+    bspec = rules.sharding(("batch", None))
+    out = {"tokens": bspec, "labels": bspec}
+    if cfg.is_encdec:
+        out["src_frames"] = rules.sharding(("batch", None, None))
+    return out
+
+
+def jit_train_step(cfg, train_cfg: TrainConfig, rules: shd.ShardingRules):
+    """jit with explicit in/out shardings (the dry-run entry point)."""
+    pspecs, m_specs, v_specs = state_specs(cfg, train_cfg, rules)
+    state_sh = TrainState(
+        params=pm.shardings(pspecs, rules),
+        opt=AdamState(
+            m=pm.shardings(m_specs, rules),
+            v=pm.shardings(v_specs, rules),
+            step=jax.sharding.NamedSharding(rules.mesh, jax.sharding.PartitionSpec()),
+        ),
+    )
+    step_fn = make_train_step(cfg, train_cfg, rules)
+    return (
+        jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_shardings(cfg, rules)),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        ),
+        state_sh,
+        (pspecs, m_specs, v_specs),
+    )
+
+
+# --------------------------------------------------------------------- #
+# host-side loop with fault tolerance
+# --------------------------------------------------------------------- #
+def run(
+    cfg,
+    train_cfg: TrainConfig,
+    data_iter,
+    *,
+    state: Optional[TrainState] = None,
+    ckpt_manager=None,
+    watchdog=None,
+    hooks: Optional[list[Callable[[int, dict], None]]] = None,
+) -> tuple[TrainState, list[dict]]:
+    """Simple single-host loop (multi-host launch wires the same step through
+    jit_train_step).  Resumes from ckpt_manager when a checkpoint exists."""
+    step_fn = jax.jit(make_train_step(cfg, train_cfg))
+    start_step = 0
+    if state is None:
+        state = init_state(cfg, train_cfg, jax.random.PRNGKey(train_cfg.seed))
+    if ckpt_manager is not None:
+        restored = ckpt_manager.restore_latest(state)
+        if restored is not None:
+            state, start_step = restored
+            data_iter.seek(start_step)
+    history = []
+    for step in range(start_step, train_cfg.total_steps):
+        batch = data_iter.next_batch()
+        t0 = time.monotonic()
+        state, metrics = step_fn(state, batch)
+        if watchdog is not None:
+            watchdog.record(step, time.monotonic() - t0)
+        if step % train_cfg.log_every == 0 or step == train_cfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["wall_s"] = time.monotonic() - t0
+            history.append(m)
+            for h in hooks or []:
+                h(step, m)
+        if ckpt_manager is not None and (step + 1) % train_cfg.checkpoint_every == 0:
+            ckpt_manager.save(state, step + 1, data_state=data_iter.state_dict())
+    return state, history

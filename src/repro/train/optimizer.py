@@ -1,0 +1,145 @@
+"""AdamW with large-scale memory tiers.
+
+Tiers (selected per ModelConfig):
+  * fp32 master + fp32 m/v (default, <8B params)
+  * bf16 m/v + bf16 master with *stochastic rounding* on the param update
+    (the 1T tier: fp32 states alone would be 12 TB; SR keeps the update
+    unbiased so bf16 states train stably — Kimi-K2-scale necessity)
+
+ZeRO-1: optimizer-state leaves get one extra sharding axis over 'data' (the
+"zero" logical axis) on the largest dimension the param leaves unsharded.
+Gradients arrive data-replicated (pjit psum), the update is computed on
+1/|data| of the state per device, and XLA materializes the implied
+reduce-scatter + all-gather — classic ZeRO-1 without manual collectives.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import ParamSpec, is_spec
+
+
+class AdamState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamState
+
+
+def _maps_to_data(axis_name, rules) -> bool:
+    if rules is None or axis_name is None:
+        return False
+    mapped = rules.rules.get(axis_name)
+    axes = (mapped,) if isinstance(mapped, str) else tuple(mapped or ())
+    return "data" in axes
+
+
+def zero1_spec(spec: ParamSpec, data_size: int, enabled: bool, rules=None) -> ParamSpec:
+    """Optimizer-state ParamSpec: same sharding as the param, plus the 'zero'
+    axis on the largest still-unsharded, divisible dim.  Leaves that already
+    shard over 'data' (FSDP tiers) are left alone — a NamedSharding may map
+    each mesh axis to one positional dim only."""
+    if not enabled or any(_maps_to_data(a, rules) for a in spec.axes):
+        return spec
+    best, best_dim = None, 0
+    for i, (d, ax) in enumerate(zip(spec.shape, spec.axes)):
+        if ax is None and d % data_size == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is None:
+        return spec
+    axes = tuple("zero" if i == best else a for i, a in enumerate(spec.axes))
+    return ParamSpec(spec.shape, axes, spec.init, spec.scale, spec.dtype)
+
+
+def opt_specs(param_specs, *, dtype=jnp.float32, data_size: int = 1,
+              zero1: bool = True, rules=None):
+    """Spec tree for (m, v) with ZeRO-1 axes and the chosen state dtype."""
+
+    def one(s: ParamSpec) -> ParamSpec:
+        z = zero1_spec(s, data_size, zero1, rules)
+        return ParamSpec(z.shape, z.axes, "zeros", None, dtype)
+
+    m = jax.tree.map(one, param_specs, is_leaf=is_spec)
+    return m, jax.tree.map(lambda s: s, m, is_leaf=is_spec)
+
+
+def _stochastic_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased f32 -> bf16 stochastic rounding via mantissa-noise truncation."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.randint(key, x.shape, 0, 1 << 16, dtype=jnp.uint32)
+    rounded = (bits + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32).astype(jnp.bfloat16)
+
+
+def adamw_update(
+    params,
+    grads,
+    opt: AdamState,
+    *,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: Optional[float] = 1.0,
+    state_dtype=jnp.float32,
+    sr_key: Optional[jax.Array] = None,
+) -> tuple[dict, AdamState]:
+    step = opt.step + 1
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(opt.m)
+    leaves_v = treedef.flatten_up_to(opt.v)
+    if sr_key is not None:
+        keys = jax.random.split(sr_key, len(leaves_p))
+    new_p, new_m, new_v = [], [], []
+    for i, (p, g, m, v) in enumerate(zip(leaves_p, leaves_g, leaves_m, leaves_v)):
+        mf = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        vf = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + weight_decay * pf)
+        if p.dtype == jnp.bfloat16 and sr_key is not None:
+            new_p.append(_stochastic_bf16(pf, keys[i]))
+        else:
+            new_p.append(pf.astype(p.dtype))
+        new_m.append(mf.astype(state_dtype))
+        new_v.append(vf.astype(state_dtype))
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        AdamState(
+            m=jax.tree.unflatten(treedef, new_m),
+            v=jax.tree.unflatten(treedef, new_v),
+            step=step,
+        ),
+    )
+
+
+def lr_schedule(step: jax.Array, *, peak: float = 3e-4, warmup: int = 100,
+                total: int = 10000, min_ratio: float = 0.1) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

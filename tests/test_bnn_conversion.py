@@ -1,0 +1,69 @@
+"""V3: BNN training + exact BNN->SNN conversion (Kim et al. [15] scheme)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esam import bnn, conversion
+from repro.data import digits
+
+
+@pytest.fixture(scope="module")
+def trained():
+    x, y = digits.make_spike_dataset(2048, seed=0)
+    params, acc = bnn.fit(
+        jax.random.PRNGKey(0), (768, 64, 64, 10), jnp.asarray(x), jnp.asarray(y),
+        steps=200, batch=128, lr=3e-3,
+    )
+    return params, jnp.asarray(x), jnp.asarray(y), acc
+
+
+def test_bnn_trains(trained):
+    _, _, _, acc = trained
+    assert acc > 0.9  # synthetic digits are easy; STE training must work
+
+
+def test_conversion_hidden_spikes_match_bnn_activations(trained):
+    params, x, _, _ = trained
+    net = conversion.bnn_to_snn(params)
+    xb = x[:256]
+    bnn_acts = bnn.hidden_activations(params, xb)           # {-1,+1}
+    _, snn_spikes = net.forward(xb.astype(bool), collect=True)
+    for a, s in zip(bnn_acts, snn_spikes):
+        np.testing.assert_array_equal(np.asarray(a) > 0, np.asarray(s))
+
+
+def test_conversion_preserves_logits_affinely(trained):
+    params, x, _, _ = trained
+    net = conversion.bnn_to_snn(params)
+    xb = x[:256]
+    # exact BNN forward (no STE): recompute with hard signs
+    h = xb
+    for i, layer in enumerate(params):
+        z = h @ bnn.sign_pm1(layer["w"]) + layer["b"]
+        h = bnn.sign_pm1(z) if i < len(params) - 1 else z
+    snn_scores = net.forward(xb.astype(bool))
+    np.testing.assert_allclose(np.asarray(h), 2 * np.asarray(snn_scores), rtol=0, atol=1e-4)
+
+
+def test_conversion_preserves_accuracy_exactly(trained):
+    params, x, y, _ = trained
+    net = conversion.bnn_to_snn(params)
+    logits_bnn = bnn.forward(params, x)
+    pred_snn = net.forward(x.astype(bool)).argmax(-1)
+    np.testing.assert_array_equal(np.asarray(logits_bnn.argmax(-1)), np.asarray(pred_snn))
+
+
+def test_paper_topology_trains_and_converts():
+    """Full 768:256:256:256:10 network (paper topology), short training run."""
+    x, y = digits.make_spike_dataset(1024, seed=1)
+    params, acc = bnn.fit(
+        jax.random.PRNGKey(1), (768, 256, 256, 256, 10), jnp.asarray(x), jnp.asarray(y),
+        steps=120, batch=128,
+    )
+    net = conversion.bnn_to_snn(params)
+    assert net.topology == (768, 256, 256, 256, 10)
+    pred = net.forward(jnp.asarray(x[:512]).astype(bool)).argmax(-1)
+    snn_acc = float((pred == jnp.asarray(y[:512])).mean())
+    assert snn_acc > 0.8

@@ -1,0 +1,72 @@
+"""Dry-run machinery: production-mesh compile in a subprocess (the 512-device
+XLA flag must not leak into this test process) + input-spec construction."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_local_process_has_one_device():
+    # the dry-run flag must never be set globally
+    assert len(jax.devices()) >= 1
+    assert "xla_force_host_platform_device_count=512" not in os.environ.get("XLA_FLAGS", "")
+
+
+@pytest.mark.parametrize("arch,shape", [("xlstm_125m", "decode_32k")])
+def test_dryrun_cell_compiles_in_subprocess(tmp_path, arch, shape):
+    """End-to-end: one real cell through the production 16x16 mesh."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    files = list(tmp_path.glob("*.json"))
+    assert len(files) == 1
+    cell = json.loads(files[0].read_text())
+    assert cell["chips"] == 256
+    assert cell["flops"] > 0
+    assert cell["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+    assert set(cell["roofline"]) == {"compute_s", "memory_s", "collective_s"}
+
+
+def test_input_specs_cover_all_cells():
+    """input_specs/cache_specs build for every (arch x applicable shape)
+    without touching devices (pure ShapeDtypeStruct plumbing)."""
+    from repro.configs import base as cb
+    from repro.distributed import sharding as shd
+    from repro.launch import dryrun as dr
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    for arch in cb.ARCH_IDS:
+        cfg = cb.get(arch)
+        for shape_name in cb.applicable_shapes(cfg):
+            shape = cb.SHAPES[shape_name]
+            rules = dr.make_rules_for(cfg, mesh, shape)
+            specs = dr.input_specs(cfg, shape, rules)
+            assert "tokens" in specs
+            if shape.kind == "decode":
+                caches = dr.cache_specs(cfg, shape, rules)
+                assert jax.tree.leaves(caches)
+
+
+def test_model_flops_moe_discount():
+    from repro.configs import base as cb
+    from repro.launch import dryrun as dr
+
+    dense = dr.model_flops(cb.get("llama3p2_1b"), cb.SHAPES["train_4k"])
+    assert dense > 0
+    kimi = cb.get("kimi_k2_1t_a32b")
+    moe = dr.model_flops(kimi, cb.SHAPES["train_4k"])
+    # active params far below total: 6*N_active*D << 6*N_total*D
+    from repro.models import lm, params as pm
+    total = 6 * pm.param_count(lm.model_specs(kimi)) * 4096 * 256
+    assert moe < 0.1 * total

@@ -1,0 +1,108 @@
+"""The roofline extraction tools: jaxpr FLOPs/bytes with scan multipliers,
+HLO collective parsing with loop trip counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_jaxpr_flops_plain_matmul():
+    f = lambda a, b: a @ b
+    stats = ha.trace_stats(f, jnp.zeros((64, 32)), jnp.zeros((32, 128)))
+    assert stats["flops"] == 2 * 64 * 32 * 128
+    assert stats["dot_bytes"] == (64 * 32 + 32 * 128 + 64 * 128) * 4
+
+
+def test_jaxpr_flops_counts_scan_trips():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    stats = ha.trace_stats(f, jnp.zeros((64, 64)), jnp.zeros((10, 64, 64)))
+    assert stats["flops"] == 10 * 2 * 64**3  # trip count applied
+
+
+def test_jaxpr_flops_nested_scan_and_remat():
+    def f(x, ws):
+        def outer(c, wpair):
+            def inner(ci, w):
+                return ci @ w, None
+            y, _ = jax.lax.scan(inner, c, wpair)
+            return y, None
+        body = jax.checkpoint(outer)
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    ws = jnp.zeros((3, 2, 32, 32))
+    stats = ha.trace_stats(f, jnp.zeros((8, 32)), ws)
+    assert stats["flops"] == 3 * 2 * 2 * 8 * 32 * 32
+
+
+def test_jaxpr_grad_includes_backward_dots():
+    f = lambda a, b: (a @ b).sum()
+    g = jax.grad(f, argnums=(0, 1))
+    stats = ha.trace_stats(g, jnp.zeros((16, 16)), jnp.zeros((16, 16)))
+    fwd = 2 * 16**3
+    assert stats["flops"] >= 3 * fwd * 0.99  # fwd + two transposed bwd dots
+
+
+def test_collective_parser_trip_counts():
+    hlo = """
+HloModule test
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %x = f32[128] get-tuple-element(%p), index=1
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128] parameter(0)
+  %ag = f32[256]{0} all-gather(%a), dimensions={0}
+  %init = (s32[], f32[128]) tuple(s32[] constant(0), %a)
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[128] get-tuple-element(%w), index=1
+}
+"""
+    coll = ha.collective_bytes(hlo)
+    assert coll["all-gather"] == 256 * 4              # entry: counted once
+    assert coll["all-reduce"] == 12 * 128 * 4         # loop body x trip count
+
+
+def test_collective_parser_ignores_operand_references():
+    hlo = """
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64] parameter(0)
+  %all-reduce.5 = f32[64]{0} all-reduce(%a), replica_groups={}
+  ROOT %g = f32[64] add(%all-reduce.5, %all-reduce.5)
+}
+"""
+    coll = ha.collective_bytes(hlo)
+    assert coll == {"all-reduce": 64 * 4.0}  # the add line must not count
+
+
+def test_collective_parser_tuple_results():
+    hlo = """
+ENTRY %main (a: f32[64], b: f32[32]) -> f32[64] {
+  %a = f32[64] parameter(0)
+  %b = f32[32] parameter(1)
+  %ar = (f32[64]{0}, f32[32]{0}) all-reduce(%a, %b), replica_groups={}
+  ROOT %o = f32[64] get-tuple-element(%ar), index=0
+}
+"""
+    coll = ha.collective_bytes(hlo)
+    assert coll["all-reduce"] == (64 + 32) * 4

@@ -1,0 +1,170 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref oracles,
+sweeping shapes/dtypes (deliverable (c))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.arbiter import ops as arb_ops
+from repro.kernels.cim_matmul import ops as cim_ops
+from repro.kernels.if_neuron import ops as if_ops
+from repro.kernels.stdp import ops as stdp_ops
+
+# ----------------------------------------------------------------------- #
+# cim_matmul / esam_layer
+# ----------------------------------------------------------------------- #
+SHAPES = [(8, 128, 128), (128, 128, 256), (64, 384, 128), (256, 256, 384)]
+SPIKE_DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8, jnp.bool_]
+
+
+@pytest.mark.parametrize("B,K,N", SHAPES)
+@pytest.mark.parametrize("sdt", SPIKE_DTYPES)
+def test_cim_matmul_matches_ref(B, K, N, sdt):
+    key = jax.random.PRNGKey(B + K + N)
+    s = jax.random.bernoulli(key, 0.4, (B, K)).astype(sdt)
+    w = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (K, N)).astype(jnp.int8)
+    out = cim_ops.cim_matmul(s, w, interpret=True)
+    ref = cim_ops.cim_matmul_ref(s, w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("B,K,N", SHAPES[:2])
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (8, 128, 64), (64, 128, 128)])
+def test_cim_matmul_block_shape_sweep(B, K, N, blocks):
+    bb, bn, bk = blocks
+    key = jax.random.PRNGKey(7)
+    s = jax.random.bernoulli(key, 0.3, (B, K)).astype(jnp.float32)
+    w = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (K, N)).astype(jnp.int8)
+    out = cim_ops.cim_matmul(s, w, block_b=bb, block_n=bn, block_k=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(cim_ops.cim_matmul_ref(s, w)))
+
+
+@pytest.mark.parametrize("B,K,N", SHAPES[:3])
+def test_esam_layer_fused_fire(B, K, N):
+    key = jax.random.PRNGKey(11)
+    s = jax.random.bernoulli(key, 0.5, (B, K)).astype(jnp.float32)
+    w = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (K, N)).astype(jnp.int8)
+    vth = jax.random.randint(jax.random.fold_in(key, 2), (N,), -9, 9, jnp.int32)
+    out = cim_ops.esam_layer(s, w, vth, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(cim_ops.esam_layer_ref(s, w, vth)))
+
+
+def test_cim_matmul_extreme_inputs():
+    # all-zero spikes, all-one spikes, all-one weights
+    for sval, wval in [(0, 0), (0, 1), (1, 0), (1, 1)]:
+        s = jnp.full((8, 128), sval, jnp.float32)
+        w = jnp.full((128, 128), wval, jnp.int8)
+        out = cim_ops.cim_matmul(s, w, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(cim_ops.cim_matmul_ref(s, w)))
+
+
+# ----------------------------------------------------------------------- #
+# arbiter
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("ports", [1, 2, 3, 4])
+@pytest.mark.parametrize("G,W", [(8, 128), (16, 128), (8, 256), (24, 64)])
+def test_arbiter_kernel_matches_ref(ports, G, W):
+    key = jax.random.PRNGKey(ports * 100 + G)
+    req = jax.random.bernoulli(key, 0.3, (G, W)).astype(jnp.int8)
+    g, rem, val = arb_ops.arbiter(req, ports=ports, interpret=True)
+    g2, rem2, val2 = arb_ops.arbiter_ref(req, ports)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g2))
+    np.testing.assert_array_equal(np.asarray(rem), np.asarray(rem2))
+    np.testing.assert_array_equal(np.asarray(val), np.asarray(val2))
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_arbiter_kernel_property(data):
+    """Property sweep vs the hardware cascade oracle, random densities."""
+    G = data.draw(st.sampled_from([8, 16]))
+    density = data.draw(st.floats(0.0, 1.0))
+    ports = data.draw(st.integers(1, 4))
+    seed = data.draw(st.integers(0, 2**16))
+    req = jax.random.bernoulli(jax.random.PRNGKey(seed), density, (G, 128)).astype(jnp.int8)
+    g, rem, val = arb_ops.arbiter(req, ports=ports, interpret=True)
+    for row in range(G):
+        g_ref, rem_ref, val_ref = arb_ops.priority_grants_oracle(
+            np.asarray(req[row], bool), ports
+        )
+        np.testing.assert_array_equal(np.asarray(g[row], bool), g_ref)
+        np.testing.assert_array_equal(np.asarray(rem[row], bool), rem_ref)
+        np.testing.assert_array_equal(np.asarray(val[row], bool), val_ref)
+
+
+# ----------------------------------------------------------------------- #
+# if_neuron
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,T,N", [(8, 32, 128), (16, 5, 256), (8, 1, 128)])
+def test_if_neuron_matches_ref(B, T, N):
+    key = jax.random.PRNGKey(B * T + N)
+    upd = jax.random.randint(key, (B, T, N), -4, 5, jnp.int32)
+    vth = jax.random.randint(jax.random.fold_in(key, 1), (N,), -20, 20, jnp.int32)
+    spikes, vmem = if_ops.if_neuron(upd, vth, interpret=True)
+    s_ref, v_ref = if_ops.if_neuron_ref(upd, vth)
+    np.testing.assert_array_equal(np.asarray(spikes), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(vmem), np.asarray(v_ref))
+
+
+def test_if_neuron_threshold_edge():
+    """fire iff V_mem >= V_th — equality must fire (Sec 2.1)."""
+    upd = jnp.ones((8, 3, 128), jnp.int32)
+    vth = jnp.full((128,), 3, jnp.int32)
+    spikes, vmem = if_ops.if_neuron(upd, vth, interpret=True)
+    assert bool(jnp.all(vmem == 3)) and bool(jnp.all(spikes == 1))
+
+
+# ----------------------------------------------------------------------- #
+# stdp
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("n_out,n_in", [(16, 128), (128, 256), (8, 128)])
+@pytest.mark.parametrize("p_pot,p_dep", [(0.0, 0.0), (1.0, 1.0), (0.3, 0.1)])
+def test_stdp_kernel_matches_ref(n_out, n_in, p_pot, p_dep):
+    key = jax.random.PRNGKey(n_out + n_in)
+    ks = jax.random.split(key, 5)
+    bits = jax.random.bernoulli(ks[0], 0.5, (n_out, n_in)).astype(jnp.int8)
+    pre = jax.random.bernoulli(ks[1], 0.4, (n_in,)).astype(jnp.int8)
+    post = jax.random.bernoulli(ks[2], 0.2, (n_out,)).astype(jnp.int8)
+    u_pot = jax.random.uniform(ks[3], (n_out, n_in))
+    u_dep = jax.random.uniform(ks[4], (n_out, n_in))
+    out = stdp_ops.stdp_update(bits, pre, post, u_pot, u_dep,
+                               p_pot=p_pot, p_dep=p_dep, interpret=True)
+    ref = stdp_ops.stdp_update_ref(bits, pre, post, u_pot, u_dep, p_pot, p_dep)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_stdp_kernel_agrees_with_core_learning_rule():
+    """kernel(transposed layout) == core stdp_update (row-major functional)."""
+    from repro.core.esam import learning as core_learning
+
+    key = jax.random.PRNGKey(5)
+    n_in, n_out = 256, 128
+    bits = jax.random.bernoulli(key, 0.5, (n_in, n_out)).astype(jnp.int8)
+    pre = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n_in,))
+    post = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.3, (n_out,))
+    # core rule with fixed uniforms == kernel with the same uniforms
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 3))
+    u_pot = jax.random.uniform(k1, (n_in, n_out))
+    u_dep = jax.random.uniform(k2, (n_in, n_out))
+    ref = stdp_ops.stdp_update_ref(bits.T, pre, post, u_pot.T, u_dep.T, 0.25, 0.1)
+    out = stdp_ops.stdp_update(bits.T, pre.astype(jnp.int8), post.astype(jnp.int8),
+                               u_pot.T, u_dep.T, p_pot=0.25, p_dep=0.1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ----------------------------------------------------------------------- #
+# kernel-vs-core end-to-end
+# ----------------------------------------------------------------------- #
+def test_kernel_layer_equals_core_functional_tile():
+    from repro.core.esam import tile as core_tile
+
+    key = jax.random.PRNGKey(21)
+    s = jax.random.bernoulli(key, 0.45, (64, 256))
+    bits = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (256, 128)).astype(jnp.int8)
+    vth = jax.random.randint(jax.random.fold_in(key, 2), (128,), -8, 8, jnp.int32)
+    spikes_k = cim_ops.esam_layer(s.astype(jnp.float32), bits, vth, interpret=True)
+    spikes_c, _ = core_tile.functional_tile(bits, s, vth)
+    np.testing.assert_array_equal(np.asarray(spikes_k, bool), np.asarray(spikes_c))

@@ -1,0 +1,62 @@
+"""Online learning (stochastic 1-bit STDP via the transposable port)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.esam import learning, tile
+from repro.data import digits
+
+
+def test_stdp_only_touches_event_columns():
+    key = jax.random.PRNGKey(0)
+    bits = jax.random.bernoulli(key, 0.5, (64, 16)).astype(jnp.int8)
+    pre = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (64,))
+    post = jnp.zeros((16,), bool).at[3].set(True)
+    new = learning.stdp_update(bits, pre, post, jax.random.fold_in(key, 2), 1.0, 1.0)
+    untouched = np.delete(np.asarray(new), 3, axis=1)
+    np.testing.assert_array_equal(untouched, np.delete(np.asarray(bits), 3, axis=1))
+    # with p=1.0 the event column becomes exactly the pre-spike pattern
+    np.testing.assert_array_equal(np.asarray(new[:, 3]), np.asarray(pre).astype(np.int8))
+
+
+def test_stdp_probability_zero_is_identity():
+    key = jax.random.PRNGKey(1)
+    bits = jax.random.bernoulli(key, 0.5, (64, 16)).astype(jnp.int8)
+    new = learning.stdp_update(
+        bits, jnp.ones((64,), bool), jnp.ones((16,), bool), key, 0.0, 0.0
+    )
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(bits))
+
+
+def test_online_learning_improves_readout():
+    """Supervised STDP on a tile improves accuracy from chance (prototype
+    learning on the input spikes — the paper's online-adaptation use case)."""
+    x, y = digits.make_spike_dataset(768, seed=3)
+    x, y = jnp.asarray(x).astype(bool), jnp.asarray(y)
+    key = jax.random.PRNGKey(0)
+    bits = jax.random.bernoulli(key, 0.5, (768, 10)).astype(jnp.int8)
+    vth = [jnp.full((10,), 2**31 - 1, jnp.int32)]
+
+    def accuracy(b):
+        _, vmem = tile.functional_tile(b, x, vth[0])
+        return float((vmem.argmax(-1) == y).mean())
+
+    acc0 = accuracy(bits)
+    n_upd = 0
+    for epoch in range(6):
+        bits, n = learning.online_learning_epoch(
+            [bits], vth, x, y, jax.random.PRNGKey(10 + epoch), p_pot=0.2, p_dep=0.1
+        )
+        n_upd += n
+    acc1 = accuracy(bits)
+    assert acc0 < 0.25                      # random readout is near chance
+    assert acc1 > acc0 + 0.3, (acc0, acc1)  # online STDP learns prototypes
+    assert n_upd > 0
+
+
+def test_learning_cost_scales_with_columns():
+    c = learning.column_update_cost(4)
+    # updating k columns costs k * (col read + col write) on the transposed port
+    k = 37
+    assert k * (c.read_ns + c.write_ns) < 128 * 2 * 1.01 * 5  # far below 1RW cost

@@ -1,0 +1,67 @@
+"""Extended training-stack invariants: microbatch equivalence, pure-DP rules,
+conversion property sweep."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import base as cb
+from repro.models import lm, params as pm
+from repro.train import loop as train_loop
+from repro.train.optimizer import AdamState
+
+
+def test_microbatched_grads_match_full_batch():
+    """mb=4 grad accumulation == single-batch gradients (fp32 accumulators)."""
+    cfg1 = cb.smoke("llama3.2-1b")
+    cfg4 = dataclasses.replace(cfg1, microbatches=4)
+    tcfg = train_loop.TrainConfig()
+    key = jax.random.PRNGKey(0)
+    state = train_loop.init_state(cfg1, tcfg, key)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (8, 16), 0, cfg1.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    s1, m1 = jax.jit(train_loop.make_train_step(cfg1, tcfg))(state, batch)
+    state2 = train_loop.init_state(cfg1, tcfg, key)
+    s4, m4 = jax.jit(train_loop.make_train_step(cfg4, tcfg))(state2, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-2
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=3e-2)
+
+
+def test_pure_dp_rules_replicate_weights():
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = shd.make_rules(mesh, n_heads=4, n_kv_heads=4, d_ff=256, d_model=64,
+                           vocab_size=512, pure_dp=True)
+    assert rules.rules["mlp"] is None and rules.rules["heads"] is None
+    assert rules.rules["vocab"] is None
+    assert "model" in tuple(rules.rules["batch"])  # batch over every axis
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_conversion_exact_for_random_bnns(seed):
+    """Property: BNN->SNN conversion is prediction-exact for ANY parameters,
+    not just trained ones (the [15] derivation is data-independent)."""
+    from repro.core.esam import bnn, conversion
+
+    key = jax.random.PRNGKey(seed)
+    topo = (128, 64, 32, 10)
+    params = bnn.init_params(key, topo)
+    # randomize biases too (init is zeros)
+    params = [
+        {"w": p["w"], "b": jax.random.normal(jax.random.fold_in(key, i), p["b"].shape)}
+        for i, p in enumerate(params)
+    ]
+    x = jax.random.bernoulli(jax.random.fold_in(key, 99), 0.4, (64, 128)).astype(jnp.float32)
+    net = conversion.bnn_to_snn(params)
+    bnn_pred = bnn.forward(params, x).argmax(-1)
+    snn_pred = net.forward(x.astype(bool)).argmax(-1)
+    np.testing.assert_array_equal(np.asarray(bnn_pred), np.asarray(snn_pred))
