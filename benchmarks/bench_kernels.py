@@ -1,19 +1,74 @@
 """Pallas kernel functional timings (interpret mode — correctness plane) and
-MXU utilization estimates for the TPU target (structural, from block shapes)."""
+MXU utilization estimates for the TPU target (structural, from block shapes).
+
+Also the packed-vs-unpacked spike-plane comparison (the PR-1 tentpole): the
+bit-packed kernels move 32 spikes per uint32 lane word, so spike HBM traffic
+drops 8x vs the int8 wire (32x vs f32).  Results are written to
+``BENCH_kernels.json`` (override with env BENCH_OUT) so the perf trajectory
+is recorded across PRs.
+"""
 
 from __future__ import annotations
+
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+try:
+    from benchmarks.common import Recorder, time_call
+except ModuleNotFoundError:  # direct `python benchmarks/bench_kernels.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+    from benchmarks.common import Recorder, time_call
+from repro.core import packing
 from repro.kernels.arbiter import ops as arb_ops
 from repro.kernels.cim_matmul import ops as cim_ops
+from repro.kernels.cim_matmul_packed import ops as pk_ops
 from repro.kernels.if_neuron import ops as if_ops
 from repro.kernels.stdp import ops as stdp_ops
 
 
+def _packed_comparison(rec: Recorder, key):
+    """Packed vs unpacked dense path at the serving shape B=1024, K=N=768."""
+    B, K, N = 1024, 768, 768
+    s = jax.random.bernoulli(key, 0.4, (B, K)).astype(jnp.float32)
+    w = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (K, N)).astype(jnp.int8)
+    vth = jnp.zeros((N,), jnp.int32)
+    packed = jax.block_until_ready(packing.pack_spikes(s))
+
+    # spike bytes moved per layer input (the wire the paper optimizes)
+    bytes_int8 = B * K                       # 1 byte per spike
+    bytes_f32 = B * K * 4                    # the pre-PR functional plane
+    bytes_packed = B * packing.packed_nbytes(K)
+    red8 = bytes_int8 / bytes_packed
+    red32 = bytes_f32 / bytes_packed
+
+    us_d, _ = time_call(
+        lambda: cim_ops.cim_matmul(s, w, interpret=True), repeats=1)
+    us_p, _ = time_call(
+        lambda: pk_ops.cim_matmul_packed(packed, w, interpret=True), repeats=1)
+    rec.emit(
+        f"kernel_cim_matmul_dense_{B}x{K}x{N}", us_d,
+        f"spike_bytes_moved={bytes_int8};wire=int8;tpu_blocks=128x128x128")
+    rec.emit(
+        f"kernel_cim_matmul_packed_{B}x{K}x{N}", us_p,
+        f"spike_bytes_moved={bytes_packed};wire=uint32_bitplane;"
+        f"reduction_vs_int8={red8:.1f}x;reduction_vs_f32={red32:.1f}x;"
+        f"unpack=vmem_shift_mask")
+
+    us_f, _ = time_call(
+        lambda: pk_ops.esam_layer_packed(packed, w, vth, interpret=True), repeats=1)
+    rec.emit(
+        f"kernel_esam_layer_packed_fused_{B}x{K}x{N}", us_f,
+        f"fused=mac+if_fire+repack;out_bytes={B * N // 8};"
+        f"inter_tile_wire=uint32_bitplane")
+
+
 def run():
+    rec = Recorder()
     key = jax.random.PRNGKey(0)
     s = jax.random.bernoulli(key, 0.4, (256, 768)).astype(jnp.float32)
     w = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (768, 256)).astype(jnp.int8)
@@ -21,22 +76,22 @@ def run():
 
     us, _ = time_call(lambda: cim_ops.cim_matmul(s, w, interpret=True))
     flops = 2 * 256 * 768 * 256
-    emit("kernel_cim_matmul_256x768x256", us,
-         f"flops={flops};tpu_blocks=128x128x128;"
-         f"mxu_aligned=yes;vmem_per_block_kb={(128*128*2*3)//1024}")
+    rec.emit("kernel_cim_matmul_256x768x256", us,
+             f"flops={flops};tpu_blocks=128x128x128;"
+             f"mxu_aligned=yes;vmem_per_block_kb={(128*128*2*3)//1024}")
 
     us, _ = time_call(lambda: cim_ops.esam_layer(s, w, vth, interpret=True))
-    emit("kernel_esam_layer_fused", us,
-         "fused=mac+if_fire;vmem_resident_vmem=acc128x128xf32")
+    rec.emit("kernel_esam_layer_fused", us,
+             "fused=mac+if_fire;vmem_resident_vmem=acc128x128xf32")
 
     req = jax.random.bernoulli(key, 0.4, (16, 128)).astype(jnp.int8)
     us, _ = time_call(lambda: arb_ops.arbiter(req, ports=4, interpret=True))
-    emit("kernel_arbiter_16x128_p4", us, "blocked_prefix=32-lane base encoders")
+    rec.emit("kernel_arbiter_16x128_p4", us, "blocked_prefix=32-lane base encoders")
 
     upd = jax.random.randint(key, (8, 32, 256), -3, 4, jnp.int32)
     us, _ = time_call(lambda: if_ops.if_neuron(upd, jnp.zeros((256,), jnp.int32),
                                                interpret=True))
-    emit("kernel_if_neuron_8x32x256", us, "vmem_resident_vmem=rounds_in_vmem")
+    rec.emit("kernel_if_neuron_8x32x256", us, "vmem_resident_vmem=rounds_in_vmem")
 
     bits = jax.random.bernoulli(key, 0.5, (128, 256)).astype(jnp.int8)
     pre = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (256,)).astype(jnp.int8)
@@ -45,7 +100,11 @@ def run():
     u2 = jax.random.uniform(jax.random.fold_in(key, 5), (128, 256))
     us, _ = time_call(lambda: stdp_ops.stdp_update(
         bits, pre, post, u1, u2, p_pot=0.2, p_dep=0.1, interpret=True))
-    emit("kernel_stdp_128x256", us, "layout=column_major_transposed_port")
+    rec.emit("kernel_stdp_128x256", us, "layout=column_major_transposed_port")
+
+    _packed_comparison(rec, jax.random.fold_in(key, 9))
+
+    rec.write_json(os.environ.get("BENCH_OUT", "BENCH_kernels.json"))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
-"""Benchmark helpers: timing + CSV emission (`name,us_per_call,derived`)."""
+"""Benchmark helpers: timing + CSV emission (`name,us_per_call,derived`) and
+an optional JSON recorder so perf trajectories can be tracked across PRs."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -23,3 +25,21 @@ def time_call(fn: Callable, *args, repeats: int = 3, **kwargs) -> tuple[float, o
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Recorder:
+    """Collects emitted rows and writes them as a JSON report (BENCH_*.json)."""
+
+    def __init__(self):
+        self.entries: list[dict] = []
+
+    def emit(self, name: str, us_per_call: float, derived: str):
+        emit(name, us_per_call, derived)
+        self.entries.append(
+            {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+        )
+
+    def write_json(self, path: str):
+        with open(path, "w") as f:
+            json.dump({"results": self.entries}, f, indent=2)
+        print(f"[bench] wrote {path} ({len(self.entries)} entries)")

@@ -28,8 +28,14 @@ def main():
 
     print("== 2. lossless BNN -> binary-SNN conversion ==")
     net = conversion.bnn_to_snn(params)
-    snn_acc = float((net.forward(xj.astype(bool)).argmax(-1) == yj).mean())
+    logits, per_layer = net.forward(xj.astype(bool), collect=True)
+    snn_acc = float((logits.argmax(-1) == yj).mean())
     print(f"   SNN accuracy: {snn_acc*100:.1f}%  topology={net.topology}")
+
+    print("== 2b. packed fused plane (uint32 bitplanes between tiles) ==")
+    logits_fused = net.forward_fused(xj[:256].astype(bool))
+    same = bool(jnp.array_equal(logits_fused, logits[:256]))
+    print(f"   forward_fused == forward on 256 samples: {same}")
 
     print("== 3. event-driven (cycle-accurate) inference, 4 ports ==")
     sample = jnp.asarray(x[0]).astype(bool)
@@ -39,7 +45,13 @@ def main():
     print(f"   cycles per tile until R_empty: {cycles}")
 
     print("== 4. system-level operating points (Fig 8 / Table 3) ==")
-    counts = [np.asarray(c, np.float64) for c in net.spike_counts(xj[:256].astype(bool))]
+    # reuse the layer spikes collected in step 2 — no tile matmul is re-run
+    counts = [
+        np.asarray(c, np.float64)
+        for c in net.spike_counts(
+            xj[:256].astype(bool), per_layer=[s[:256] for s in per_layer]
+        )
+    ]
     for ports in range(5):
         s = system_stats(cm.PAPER_TOPOLOGY, counts, ports)
         print(f"   {s.cell:7s}: {s.throughput_inf_s/1e6:6.2f} MInf/s  "

@@ -3,9 +3,13 @@
 Planes:
   * functional (batched, MXU-friendly): ``EsamNetwork.forward`` — bit-exact
     with the event-driven plane; this is what the TPU kernels accelerate.
-  * cycle-accurate (event-driven): ``EsamNetwork.forward_cycle_accurate`` +
-    ``system_stats`` — reproduces the paper's throughput/energy/power claims
-    from the calibrated 3nm cost model.
+  * packed fused (bit-plane wire format): ``EsamNetwork.forward_fused`` —
+    spikes travel between tiles as uint32 bitplanes (32 spikes/word, the
+    paper's parallel-pulse bus) through the kernels/cim_matmul_packed
+    cascade; logits bit-identical to ``forward``.
+  * cycle-accurate (event-driven): ``EsamNetwork.forward_cycle_accurate``
+    (+ ``_batch``) + ``system_stats`` — reproduces the paper's
+    throughput/energy/power claims from the calibrated 3nm cost model.
 """
 
 from repro.core.esam import arbiter, bnn, conversion, cost_model, learning, neuron, network, tile

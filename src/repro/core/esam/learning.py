@@ -99,20 +99,28 @@ def online_learning_epoch(
     key: jax.Array,
     p_pot: float = 0.12,
     p_dep: float = 0.06,
+    pre_spikes: jax.Array | None = None,
 ):
     """Supervised-STDP pass over a batch for the *last* tile (delta-rule style).
 
     Teacher signal: the correct class neuron is a potentiation event; the
     argmax-wrong neuron is a depression event.  Returns (new last-layer bits,
     number of column updates) — the count feeds the cost model.
+
+    ``pre_spikes`` takes the last hidden layer's spikes if the caller already
+    ran ``EsamNetwork.forward(..., collect=True)`` — the frozen prefix tiles
+    are then not re-evaluated here.
     """
     from repro.core.esam import tile as tile_mod
 
     bits_last = network_bits[-1]
     n_updates = 0
-    s = spikes
-    for w, th in zip(network_bits[:-1], vth[:-1]):
-        s, _ = tile_mod.functional_tile(w, s, th)
+    if pre_spikes is not None:
+        s = pre_spikes
+    else:
+        s = spikes
+        for w, th in zip(network_bits[:-1], vth[:-1]):
+            s, _ = tile_mod.functional_tile(w, s, th)
 
     def body(carry, inp):
         bits, key = carry

@@ -70,25 +70,79 @@ class EsamNetwork:
             return logits, per_layer
         return logits
 
-    def spike_counts(self, spikes: jax.Array) -> list[jax.Array]:
+    def spike_counts(
+        self, spikes: jax.Array, per_layer: Sequence[jax.Array] | None = None
+    ) -> list[jax.Array]:
         """Per-layer, per-row-group spike counts for a batch (for the cost model).
 
         Returns a list over tiles of int32[..., n_groups]: the arbiter load of
         each 128-row group at that tile's input.
+
+        ``per_layer`` takes the hidden-layer spikes a caller already computed
+        via ``forward(..., collect=True)`` — the counts are then pure
+        reductions and no tile matmul is re-run.
         """
-        counts = []
-        s = spikes
-        for i, (w, th) in enumerate(zip(self.weight_bits, self.vth)):
-            g = arb.split_row_groups(s.astype(jnp.int32))
-            counts.append(g.sum(-1))
-            if i < len(self.weight_bits) - 1:
+        if per_layer is None:
+            per_layer = []
+            s = spikes
+            for w, th in zip(self.weight_bits[:-1], self.vth[:-1]):
                 s, _ = tile_mod.functional_tile(w, s, th)
-        return counts
+                per_layer.append(s)
+        n_hidden = len(self.weight_bits) - 1
+        assert len(per_layer) >= n_hidden, (len(per_layer), n_hidden)
+        layer_inputs = [spikes, *per_layer[:n_hidden]]
+        return [
+            arb.split_row_groups(s.astype(jnp.int32)).sum(-1) for s in layer_inputs
+        ]
+
+    # ------------------------------------------------------------------ #
+    # Packed (bit-plane) fused plane — the inter-tile pulse bus on TPU
+    # ------------------------------------------------------------------ #
+    def forward_fused(
+        self, spikes: jax.Array, *, interpret: bool | None = None
+    ) -> jax.Array:
+        """``forward`` on the packed datapath: spikes are bit-packed once at
+        the input, every hidden tile runs the fused MAC+fire+re-pack kernel
+        (kernels/cim_matmul_packed), and only uint32 bitplanes — 32 spikes per
+        lane word, the paper's parallel-pulse wire — travel between tiles.
+        Logits are bit-identical to ``forward`` (tested)."""
+        from repro.core import packing
+
+        n_in = spikes.shape[-1]
+        lead = spikes.shape[:-1]
+        packed = packing.pack_spikes(spikes.reshape(-1, n_in))
+        logits = self.forward_fused_packed(packed, interpret=interpret)
+        return logits.reshape(*lead, logits.shape[-1])
+
+    def forward_fused_packed(
+        self, packed: jax.Array, *, interpret: bool | None = None
+    ) -> jax.Array:
+        """Fused cascade over pre-packed spikes uint32[B, ceil(n_in/32)].
+
+        Hidden widths must be multiples of 32 (they are 128-aligned tile
+        columns in every paper topology) so fired planes re-pack exactly.
+        """
+        from repro.kernels.cim_matmul_packed import ops as packed_ops
+
+        for w in self.weight_bits[:-1]:
+            assert w.shape[1] % 32 == 0, (
+                "hidden width must be 32-aligned for the packed plane",
+                w.shape,
+            )
+        p = packed
+        for w, th in zip(self.weight_bits[:-1], self.vth[:-1]):
+            p = packed_ops.esam_layer_packed(p, w, th, interpret=interpret)
+        vmem = packed_ops.cim_matmul_packed(
+            p, self.weight_bits[-1], interpret=interpret
+        )
+        return vmem.astype(jnp.float32) + self.out_offset
 
     # ------------------------------------------------------------------ #
     # Cycle-accurate (event-driven) plane
     # ------------------------------------------------------------------ #
-    def forward_cycle_accurate(self, spikes1: jax.Array, ports: int):
+    def forward_cycle_accurate(
+        self, spikes1: jax.Array, ports: int, record_vmem_trace: bool = False
+    ):
         """Single-sample event-driven simulation through every tile.
 
         Returns (logits, [TileTrace per tile]).  Output logits are bit-identical
@@ -98,7 +152,26 @@ class EsamNetwork:
         traces = []
         s = spikes1
         for w, th in zip(self.weight_bits, self.vth):
-            tr = tile_mod.simulate_tile(w, s, th, ports)
+            tr = tile_mod.simulate_tile(w, s, th, ports, record_vmem_trace)
+            traces.append(tr)
+            s = tr.out_spikes
+        logits = traces[-1].vmem_final.astype(jnp.float32) + self.out_offset
+        return logits, traces
+
+    def forward_cycle_accurate_batch(
+        self, spikes: jax.Array, ports: int, record_vmem_trace: bool = False
+    ):
+        """Event-driven simulation of a whole batch (vmapped tiles).
+
+        spikes: bool[batch, n_in].  Returns (logits float[batch, n_cls],
+        [batched TileTrace per tile]) — each trace field has a leading batch
+        axis.  With the default ``record_vmem_trace=False`` the per-sample
+        state stays O(n_out), which is what makes this plane batchable.
+        """
+        traces = []
+        s = spikes
+        for w, th in zip(self.weight_bits, self.vth):
+            tr = tile_mod.simulate_tile_batch(w, s, th, ports, record_vmem_trace)
             traces.append(tr)
             s = tr.out_spikes
         logits = traces[-1].vmem_final.astype(jnp.float32) + self.out_offset

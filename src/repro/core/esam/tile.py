@@ -32,7 +32,8 @@ class TileTrace(NamedTuple):
     vmem_final: jax.Array      # int32[n_out] V_mem right before the compare
     cycles: jax.Array          # int32 — cycles until R_empty
     grants_per_cycle: jax.Array  # int32[max_cycles] — total grants each cycle
-    vmem_trace: jax.Array      # int32[max_cycles, n_out]
+    vmem_trace: jax.Array      # int32[max_cycles, n_out] when recorded,
+    #                            int32[0, n_out] otherwise (opt-in, see below)
 
 
 def max_drain_cycles(rows: int, ports: int, group: int = 128) -> int:
@@ -41,14 +42,20 @@ def max_drain_cycles(rows: int, ports: int, group: int = 128) -> int:
     return -(-group // ports)
 
 
-@partial(jax.jit, static_argnames=("ports",))
+@partial(jax.jit, static_argnames=("ports", "record_vmem_trace"))
 def simulate_tile(
     weight_bits: jax.Array,   # {0,1}[n_in, n_out] stored bits
     in_spikes: jax.Array,     # bool[n_in]
     vth: jax.Array,           # int32[n_out]
     ports: int,
+    record_vmem_trace: bool = False,
 ) -> TileTrace:
-    """Run one tile to R_empty, one arbiter round per scan step."""
+    """Run one tile to R_empty, one arbiter round per scan step.
+
+    ``record_vmem_trace`` opts in to the full per-cycle V_mem history; by
+    default the scan carries O(n_out) state instead of O(max_cycles * n_out)
+    outputs, which is what makes the vmapped batch plane affordable.
+    """
     n_in, n_out = weight_bits.shape
     w_signed = nrn.decode_bitlines(weight_bits)            # {-1,+1} int32
     groups = arb.split_row_groups(in_spikes)               # [G, 128]
@@ -64,12 +71,17 @@ def simulate_tile(
         port_vals = jnp.einsum("gpr,grn->gpn", grants.astype(jnp.int32), w_grouped)
         contrib = jnp.where(valid[:, :, None], port_vals, 0).sum(axis=(0, 1))
         n_granted = valid.sum().astype(jnp.int32)
-        return (rem2, vmem + contrib.astype(jnp.int32)), (n_granted, vmem + contrib)
+        vmem2 = vmem + contrib.astype(jnp.int32)
+        ys = (n_granted, vmem2) if record_vmem_trace else n_granted
+        return (rem2, vmem2), ys
 
     init = (groups, jnp.zeros((n_out,), jnp.int32))
-    (remaining, vmem), (grants_seq, vmem_trace) = jax.lax.scan(
-        cycle, init, None, length=max_cycles
-    )
+    (remaining, vmem), ys = jax.lax.scan(cycle, init, None, length=max_cycles)
+    if record_vmem_trace:
+        grants_seq, vmem_trace = ys
+    else:
+        grants_seq = ys
+        vmem_trace = jnp.zeros((0, n_out), jnp.int32)
     state = nrn.NeuronState(vmem=vmem, fired=jnp.zeros((n_out,), bool))
     _, out_spikes = nrn.fire(state, vth)
     cycles = jnp.sum(grants_seq > 0).astype(jnp.int32)
@@ -80,6 +92,24 @@ def simulate_tile(
         grants_per_cycle=grants_seq,
         vmem_trace=vmem_trace,
     )
+
+
+@partial(jax.jit, static_argnames=("ports", "record_vmem_trace"))
+def simulate_tile_batch(
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out]
+    in_spikes: jax.Array,     # bool[batch, n_in]
+    vth: jax.Array,           # int32[n_out]
+    ports: int,
+    record_vmem_trace: bool = False,
+) -> TileTrace:
+    """Cycle-accurate plane over a batch of samples (vmapped ``simulate_tile``).
+
+    Every TileTrace field gains a leading batch axis; per-sample semantics are
+    identical to the single-sample simulator (tested).
+    """
+    return jax.vmap(
+        lambda s: simulate_tile(weight_bits, s, vth, ports, record_vmem_trace)
+    )(in_spikes)
 
 
 def functional_tile(

@@ -1,0 +1,91 @@
+"""Bit-packed spike planes: 32 binary spikes per uint32 lane word.
+
+The paper's inter-tile fabric moves spikes as parallel single-bit pulses
+(Sec 3.1) — one wire per pre-synaptic neuron, never a full-precision word.
+Our functional plane previously stored every spike in its own int8/bf16
+element, moving 8-16x the bits the hardware would.  This module defines the
+repo-wide wire format that closes that gap:
+
+    spikes {0,1}[..., n]  <->  packed uint32[..., ceil(n/32)]
+
+Bit ``b`` of word ``j`` holds spike ``j*32 + b`` (LSB-first within a word).
+Positions past ``n`` in the last word are zero ("silent") — a zero spike
+contributes nothing to the CIM MAC regardless of the stored weight bit, so
+padding is exact, never approximate.
+
+Both jnp and numpy implementations are provided: the jnp pair is what the
+packed Pallas kernels (kernels/cim_matmul_packed) and ``forward_fused`` use;
+the numpy pair lets the host-side data pipeline and serving engine emit the
+wire format without touching an accelerator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE_BITS = 32  # spikes per packed word (uint32 lanes)
+
+
+def packed_width(n: int) -> int:
+    """Number of uint32 words needed for n spikes."""
+    return -(-n // LANE_BITS)
+
+
+def packed_nbytes(n: int) -> int:
+    """Wire bytes per sample for an n-spike plane (vs n bytes unpacked int8)."""
+    return packed_width(n) * 4
+
+
+# --------------------------------------------------------------------- #
+# jnp (device) pair
+# --------------------------------------------------------------------- #
+def pack_spikes(spikes: jax.Array) -> jax.Array:
+    """{0,1}[..., n] (any dtype) -> uint32[..., ceil(n/32)]."""
+    n = spikes.shape[-1]
+    w = packed_width(n)
+    bits = (spikes != 0).astype(jnp.uint32)
+    pad = w * LANE_BITS - n
+    if pad:
+        widths = [(0, 0)] * (bits.ndim - 1) + [(0, pad)]
+        bits = jnp.pad(bits, widths)
+    b = bits.reshape(bits.shape[:-1] + (w, LANE_BITS))
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    # distinct powers of two — the sum is an exact bitwise OR, no overflow
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_spikes(packed: jax.Array, n: int, dtype=jnp.int8) -> jax.Array:
+    """uint32[..., W] -> {0,1}[..., n] in ``dtype``."""
+    w = packed.shape[-1]
+    assert w == packed_width(n), (w, n)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(packed.shape[:-1] + (w * LANE_BITS,))
+    return flat[..., :n].astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# numpy (host) pair — bit-identical layout, no jax dependency at call time
+# --------------------------------------------------------------------- #
+def pack_spikes_np(spikes: np.ndarray) -> np.ndarray:
+    n = spikes.shape[-1]
+    w = packed_width(n)
+    bits = (np.asarray(spikes) != 0).astype(np.uint32)
+    pad = w * LANE_BITS - n
+    if pad:
+        widths = [(0, 0)] * (bits.ndim - 1) + [(0, pad)]
+        bits = np.pad(bits, widths)
+    b = bits.reshape(bits.shape[:-1] + (w, LANE_BITS))
+    shifts = np.arange(LANE_BITS, dtype=np.uint32)
+    return np.sum(b << shifts, axis=-1, dtype=np.uint64).astype(np.uint32)
+
+
+def unpack_spikes_np(packed: np.ndarray, n: int, dtype=np.int8) -> np.ndarray:
+    w = packed.shape[-1]
+    assert w == packed_width(n), (w, n)
+    shifts = np.arange(LANE_BITS, dtype=np.uint32)
+    bits = (packed[..., None] >> shifts) & np.uint32(1)
+    flat = bits.reshape(packed.shape[:-1] + (w * LANE_BITS,))
+    return flat[..., :n].astype(dtype)

@@ -152,6 +152,6 @@ def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
 
 
 def make_mesh_axes(shape: tuple[int, ...], names: tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
-    )
+    from repro import compat
+
+    return compat.make_mesh(shape, names)

@@ -118,7 +118,9 @@ def esam_layer(
     if interpret is None:
         interpret = default_interpret()
     B, K = spikes.shape
-    _, N = weight_bits.shape
+    K2, N = weight_bits.shape
+    assert K == K2, (K, K2)
+    assert vth.shape == (N,), (vth.shape, N)
     bm, bn, bk = min(block_b, B), min(block_n, N), min(block_k, K)
     assert B % bm == 0 and N % bn == 0 and K % bk == 0
     n_k = K // bk

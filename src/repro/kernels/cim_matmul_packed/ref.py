@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the packed CIM MAC: unpack, then the unpacked oracle."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import packing
+from repro.kernels.cim_matmul.ref import cim_matmul_ref, esam_layer_ref
+
+
+def cim_matmul_packed_ref(packed: jax.Array, weight_bits: jax.Array) -> jax.Array:
+    """V_mem int32[B, N] from uint32 bitplanes [B, ceil(K/32)]."""
+    spikes = packing.unpack_spikes(packed, weight_bits.shape[0])
+    return cim_matmul_ref(spikes, weight_bits)
+
+
+def esam_layer_packed_ref(
+    packed: jax.Array,
+    weight_bits: jax.Array,
+    vth: jax.Array,
+    *,
+    pack_output: bool = True,
+) -> jax.Array:
+    """Fused-fire oracle; packed output when ``pack_output``."""
+    spikes = packing.unpack_spikes(packed, weight_bits.shape[0])
+    out = esam_layer_ref(spikes, weight_bits, vth)
+    return packing.pack_spikes(out) if pack_output else out

@@ -17,3 +17,24 @@ def default_interpret() -> bool:
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_dim_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` of x up to ``size`` (no-op if already there).
+
+    Zero spike bits / zero weight rows are exact padding for the binary CIM
+    MAC: a silent spike contributes nothing regardless of the stored bit.
+    """
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    assert cur < size, (cur, size)
+    import jax.numpy as jnp
+
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - cur)
+    return jnp.pad(x, widths)

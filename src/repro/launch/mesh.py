@@ -13,15 +13,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 256 chips (16x16).  Multi-pod: 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    from repro import compat
+
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever the current host offers (tests / examples): (n, 1) mesh."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
-    )
+    from repro import compat
+
+    return compat.make_mesh((n, 1), ("data", "model"))

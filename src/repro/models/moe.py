@@ -246,12 +246,14 @@ def moe_ffn(p: dict, cfg, x: jax.Array) -> jax.Array:
     spec_wd = rules.spec(("experts", "expert_mlp", "expert_embed"))
     spec_x = P(batch_spec, None, None)
     spec_r = P(batch_spec, None, None)
-    y = jax.shard_map(
+    from repro import compat
+
+    y = compat.shard_map(
         per_device,
         mesh=mesh,
         in_specs=(spec_x, spec_r, spec_r, spec_w, spec_w, spec_wd),
         out_specs=spec_x,
-        check_vma=False,
+        check=False,
     )(x, ids, gates, p["w_gate"], p["w_up"], p["w_down"])
     return constrain(y, "batch", None, "act_embed")
 

@@ -330,9 +330,11 @@ def slstm_block(p: dict, cfg, x: jax.Array, *, return_state: bool = False):
     def inner(p_, x_):
         return _slstm_block_impl(p_, cfg, x_, return_state)
 
-    return jax.shard_map(
+    from repro import compat
+
+    return compat.shard_map(
         inner, mesh=mesh, in_specs=(p_specs, bspec3), out_specs=out_specs,
-        check_vma=False,
+        check=False,
     )(p, x)
 
 

@@ -1,6 +1,14 @@
-"""Batched serving engine: prefill + decode loop with slot-based continuous
-batching (fixed B decode slots; finished sequences free their slot and the
-next queued request is prefilled into it).
+"""Batched serving engines.
+
+``Engine``: LM prefill + decode loop with slot-based continuous batching
+(fixed B decode slots; finished sequences free their slot and the next queued
+request is prefilled into it).
+
+``SpikeEngine``: ESAM spike-classification serving on the packed plane —
+requests are bit-packed host-side into the uint32 wire format (32 spikes per
+lane word, the paper's parallel-pulse inter-tile bus) and batched through
+``EsamNetwork.forward_fused_packed``, so neither the server->device transfer
+nor the tile cascade ever materializes an unpacked spike tensor in HBM.
 """
 
 from __future__ import annotations
@@ -91,3 +99,54 @@ class Engine:
             next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         for r, o in zip(reqs, outs):
             r.output = np.asarray(o, np.int32)
+
+
+# ------------------------------------------------------------------ #
+# ESAM spike-classification serving (packed plane)
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class SpikeRequest:
+    spikes: np.ndarray                     # {0,1}[n_in] (any dtype)
+    # filled by the engine:
+    logits: Optional[np.ndarray] = None    # float32[n_classes]
+    label: Optional[int] = None            # argmax readout
+
+
+class SpikeEngine:
+    """Fixed-slot batched inference over an ``EsamNetwork``.
+
+    Requests are packed on the host (numpy — no device round-trip) and padded
+    to ``batch_size`` slots; silent (all-zero) pad rows are exact because a
+    zero spike never contributes to the CIM MAC.
+    """
+
+    def __init__(self, net, *, batch_size: int = 128,
+                 interpret: Optional[bool] = None):
+        from repro.core import packing
+
+        self.net = net
+        self.batch_size = batch_size
+        self.n_in = net.topology[0]
+        self._packing = packing
+        self._fwd = jax.jit(
+            lambda packed: net.forward_fused_packed(packed, interpret=interpret)
+        )
+
+    def serve(self, requests: list[SpikeRequest]) -> list[SpikeRequest]:
+        queue = list(requests)
+        while queue:
+            batch_reqs = queue[: self.batch_size]
+            queue = queue[self.batch_size:]
+            self._serve_batch(batch_reqs)
+        return requests
+
+    def _serve_batch(self, reqs: list[SpikeRequest]):
+        spikes = np.zeros((self.batch_size, self.n_in), np.uint8)
+        for i, r in enumerate(reqs):
+            assert r.spikes.shape == (self.n_in,), (r.spikes.shape, self.n_in)
+            spikes[i] = np.asarray(r.spikes) != 0
+        packed = jnp.asarray(self._packing.pack_spikes_np(spikes))
+        logits = np.asarray(self._fwd(packed))
+        for i, r in enumerate(reqs):
+            r.logits = logits[i]
+            r.label = int(logits[i].argmax())

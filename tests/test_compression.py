@@ -37,8 +37,9 @@ def test_error_feedback_makes_accumulation_unbiased():
 
 
 def test_compressed_allreduce_under_shard_map():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("data",))
     from jax.sharding import PartitionSpec as P
 
     g = {"w": jnp.linspace(-1.0, 1.0, 64)}
@@ -48,8 +49,8 @@ def test_compressed_allreduce_under_shard_map():
         return comp.compressed_allreduce(g, e, "data")
 
     out, new_e = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-                      check_vma=False)
+        compat.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+                         check=False)
     )(g, e)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]), atol=0.02)
     # residual consistent with the quantization

@@ -44,8 +44,9 @@ def test_input_specs_cover_all_cells():
     from repro.distributed import sharding as shd
     from repro.launch import dryrun as dr
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     for arch in cb.ARCH_IDS:
         cfg = cb.get(arch)
         for shape_name in cb.applicable_shapes(cfg):

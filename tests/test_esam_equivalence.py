@@ -55,6 +55,56 @@ def test_network_cycle_accurate_equals_functional():
     assert len(traces) == 3
 
 
+@pytest.mark.parametrize("ports", [1, 4])
+def test_batched_simulate_tile_matches_single_sample(ports):
+    """vmapped cycle-accurate plane == per-sample simulator, field by field."""
+    key = jax.random.PRNGKey(17)
+    bits, vth = _rand_tile(key, 256, 64)
+    spikes = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.35, (6, 256))
+    batched = tile_mod.simulate_tile_batch(bits, spikes, vth, ports)
+    for i in range(spikes.shape[0]):
+        single = tile_mod.simulate_tile(bits, spikes[i], vth, ports)
+        np.testing.assert_array_equal(
+            np.asarray(batched.vmem_final[i]), np.asarray(single.vmem_final))
+        np.testing.assert_array_equal(
+            np.asarray(batched.out_spikes[i]), np.asarray(single.out_spikes))
+        np.testing.assert_array_equal(
+            np.asarray(batched.grants_per_cycle[i]),
+            np.asarray(single.grants_per_cycle))
+        assert int(batched.cycles[i]) == int(single.cycles)
+
+
+def test_vmem_trace_is_opt_in():
+    """Default scan state is O(n_out): the trace is empty unless requested,
+    and when requested it ends at the final V_mem."""
+    key = jax.random.PRNGKey(23)
+    bits, vth = _rand_tile(key, 256, 32)
+    spikes = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.4, (256,))
+    lean = tile_mod.simulate_tile(bits, spikes, vth, 4)
+    assert lean.vmem_trace.shape == (0, 32)
+    full = tile_mod.simulate_tile(bits, spikes, vth, 4, record_vmem_trace=True)
+    assert full.vmem_trace.shape == (tile_mod.max_drain_cycles(256, 4), 32)
+    np.testing.assert_array_equal(
+        np.asarray(full.vmem_trace[-1]), np.asarray(full.vmem_final))
+    np.testing.assert_array_equal(
+        np.asarray(full.vmem_final), np.asarray(lean.vmem_final))
+
+
+def test_network_batched_cycle_accurate_equals_functional():
+    key = jax.random.PRNGKey(31)
+    topo = (256, 128, 128, 10)
+    bits, vth = [], []
+    for i in range(len(topo) - 1):
+        b, t = _rand_tile(jax.random.fold_in(key, i), topo[i], topo[i + 1])
+        bits.append(b)
+        vth.append(t)
+    net = EsamNetwork(weight_bits=bits, vth=vth, out_offset=jnp.zeros((10,)))
+    s = jax.random.bernoulli(jax.random.fold_in(key, 7), 0.4, (8, 256))
+    logits_b, traces = net.forward_cycle_accurate_batch(s, ports=4)
+    np.testing.assert_array_equal(np.asarray(logits_b), np.asarray(net.forward(s)))
+    assert len(traces) == 3 and traces[0].out_spikes.shape == (8, 128)
+
+
 def test_unused_port_never_contributes():
     """A tile with a single spike must add exactly one row, regardless of p."""
     n_in, n_out = 128, 16

@@ -77,8 +77,9 @@ def test_restore_across_mesh_shapes(tmp_path):
 
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     ckpt_io.save(tree, str(tmp_path), 1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     sh = {"w": NamedSharding(mesh, P("data", "model"))}
     restored, _ = ckpt_io.restore(jax.tree.map(jnp.zeros_like, tree), str(tmp_path), 1,
                                   shardings=sh)

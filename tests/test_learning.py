@@ -55,6 +55,34 @@ def test_online_learning_improves_readout():
     assert n_upd > 0
 
 
+def test_online_learning_epoch_accepts_precomputed_pre_spikes():
+    """Passing the collected last-hidden spikes (forward collect=True) gives
+    bit-identical updates to letting the epoch re-run the frozen prefix."""
+    from repro.core.esam import EsamNetwork
+
+    key = jax.random.PRNGKey(4)
+    topo = (128, 64, 10)
+    bits = [
+        jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i + 1])).astype(jnp.int8)
+        for i in range(2)
+    ]
+    vth = [jax.random.randint(jax.random.fold_in(key, 10), (64,), -5, 5, jnp.int32),
+           jnp.full((10,), 2**31 - 1, jnp.int32)]
+    x = jax.random.bernoulli(jax.random.fold_in(key, 20), 0.4, (32, 128))
+    y = jax.random.randint(jax.random.fold_in(key, 21), (32,), 0, 10, jnp.int32)
+
+    new_a, n_a = learning.online_learning_epoch(
+        bits, vth, x, y, jax.random.PRNGKey(9), p_pot=0.3, p_dep=0.15)
+    net = EsamNetwork(weight_bits=bits, vth=vth, out_offset=jnp.zeros((10,)))
+    _, per_layer = net.forward(x, collect=True)
+    new_b, n_b = learning.online_learning_epoch(
+        bits, vth, x, y, jax.random.PRNGKey(9), p_pot=0.3, p_dep=0.15,
+        pre_spikes=per_layer[-1])
+    np.testing.assert_array_equal(np.asarray(new_a), np.asarray(new_b))
+    assert n_a == n_b
+
+
 def test_learning_cost_scales_with_columns():
     c = learning.column_update_cost(4)
     # updating k columns costs k * (col read + col write) on the transposed port

@@ -24,8 +24,9 @@ def _setup(expert_fsdp=False, moe_impl="gather_weights", cf=8.0):
 
 
 def _rules(cfg, expert_fsdp):
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     return shd.make_rules(
         mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
         n_experts=cfg.n_experts, d_ff=cfg.d_ff, d_model=cfg.d_model,

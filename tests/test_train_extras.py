@@ -36,8 +36,9 @@ def test_microbatched_grads_match_full_batch():
 def test_pure_dp_rules_replicate_weights():
     from repro.distributed import sharding as shd
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     rules = shd.make_rules(mesh, n_heads=4, n_kv_heads=4, d_ff=256, d_model=64,
                            vocab_size=512, pure_dp=True)
     assert rules.rules["mlp"] is None and rules.rules["heads"] is None
