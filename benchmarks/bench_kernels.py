@@ -102,6 +102,15 @@ def run():
         bits, pre, post, u1, u2, p_pot=0.2, p_dep=0.1, interpret=True))
     rec.emit("kernel_stdp_128x256", us, "layout=column_major_transposed_port")
 
+    uv1 = jax.random.uniform(jax.random.fold_in(key, 6), (256,))
+    uv2 = jax.random.uniform(jax.random.fold_in(key, 7), (256,))
+    us, _ = time_call(lambda: stdp_ops.stdp_column_event(
+        bits, jnp.asarray(5, jnp.int32), jnp.asarray(True),
+        pre.astype(bool), uv1, uv2, p_pot=0.2, p_dep=0.1, interpret=True))
+    rec.emit("kernel_stdp_column_event_128x256", us,
+             "grid=event_column_only;write=aliased_in_place;"
+             "rng_draws_per_event=n_in_not_n_in_x_n_out")
+
     _packed_comparison(rec, jax.random.fold_in(key, 9))
 
     rec.write_json(os.environ.get("BENCH_OUT", "BENCH_kernels.json"))

@@ -1,9 +1,12 @@
 """Online learning via the transposable port (Sec 4.4.1 + [16]).
 
 A deployed SNN with a random readout adapts on-device through supervised
-stochastic STDP; every weight update is a column access through the
-transposed port, and the script accounts its hardware cost for both the 1RW
-baseline and the 1RW+4R cell (the 26.0x / 19.5x claim, end to end).
+stochastic STDP.  The epochs run on the fused column-event plane
+(`train/online.py`): the frozen prefix is computed once on the packed
+datapath, the readout stays transposed-resident across epochs, and every
+weight update is a column access through the transposed port — the script
+accounts its hardware cost for both the 1RW baseline and the 1RW+4R cell
+(the 26.0x / 19.5x claim, end to end).
 
 Run:  PYTHONPATH=src python examples/online_learning.py
 """
@@ -11,39 +14,42 @@ Run:  PYTHONPATH=src python examples/online_learning.py
 import jax
 import jax.numpy as jnp
 
-from repro.core.esam import learning, tile
+from repro.core.esam import learning
+from repro.core.esam.network import EsamNetwork
 from repro.data import digits
+from repro.train import online as online_train
 
 
 def main():
     x, y = digits.make_spike_dataset(768, seed=3)
     x, y = jnp.asarray(x).astype(bool), jnp.asarray(y)
     bits = jax.random.bernoulli(jax.random.PRNGKey(0), 0.5, (768, 10)).astype(jnp.int8)
-    vth = [jnp.full((10,), 2**31 - 1, jnp.int32)]
-
-    def acc(b):
-        _, vmem = tile.functional_tile(b, x, vth[0])
-        return float((vmem.argmax(-1) == y).mean())
+    net = EsamNetwork(
+        weight_bits=[bits],
+        vth=[jnp.full((10,), 2**31 - 1, jnp.int32)],
+        out_offset=jnp.zeros((10,)),
+    )
 
     c4 = learning.column_update_cost(4)
     c0 = learning.column_update_cost(0)
     print(f"column update: 1RW read {c0.read_ns:.1f}ns/write {c0.write_ns:.1f}ns | "
           f"4R transposed read {c4.read_ns}ns ({c4.speedup_read_vs_1rw:.1f}x) "
           f"write {c4.write_ns}ns ({c4.speedup_write_vs_1rw:.1f}x)")
-    print(f"epoch  accuracy  col-updates  t_4R(us)  t_1RW(us)  E_4R(nJ)  E_1RW(nJ)")
-    total = 0
-    print(f"  --   {acc(bits)*100:7.1f}%")
-    for epoch in range(6):
-        bits, n = learning.online_learning_epoch(
-            [bits], vth, x, y, jax.random.PRNGKey(10 + epoch), p_pot=0.2, p_dep=0.1)
-        total += n
+
+    acc0 = float((jnp.argmax(net.forward(x), -1) == y).mean())
+    res = online_train.train_online(
+        net, x, y, epochs=6, key=jax.random.PRNGKey(10), p_pot=0.2, p_dep=0.1)
+
+    print("epoch  accuracy  col-updates  t_4R(us)  t_1RW(us)  E_4R(nJ)  E_1RW(nJ)")
+    print(f"  --   {acc0 * 100:7.1f}%")
+    for epoch, (acc, n) in enumerate(zip(res.accuracy, res.n_updates)):
         t4 = n * (c4.read_ns + c4.write_ns) * 1e-3
         t0 = n * (c0.read_ns + c0.write_ns) * 1e-3
         e4 = n * c4.energy_pj * 1e-3
         e0 = n * c0.energy_pj * 1e-3
-        print(f"  {epoch:2d}   {acc(bits)*100:7.1f}%  {n:10d}  {t4:8.1f}  {t0:9.1f}"
+        print(f"  {epoch:2d}   {acc * 100:7.1f}%  {n:10d}  {t4:8.1f}  {t0:9.1f}"
               f"  {e4:8.2f}  {e0:8.1f}")
-    print(f"total column updates: {total}")
+    print(f"total column updates: {sum(res.n_updates)}")
 
 
 if __name__ == "__main__":

@@ -8,19 +8,52 @@ learning event, synapses from recently-active pre-neurons potentiate (bit->1)
 with probability p_pot and synapses from silent pre-neurons depress (bit->0)
 with probability p_dep.
 
-On TPU the transposed port becomes a layout choice: the update is a masked
-column write (see kernels/stdp); here is the functional plane plus the cost
-accounting that reproduces the paper's 26.0x / 19.5x claims.
+On TPU the transposed port becomes a layout choice: weights live
+transposed-resident as ``{0,1}[N_out, N_in]`` so one learning neuron's
+synapses are one contiguous row, and each supervised event is a blocked
+row write issued through ``kernels/stdp.stdp_column_event`` (the Pallas
+column-port kernel wired into ``online_learning_epoch`` below).  Per sample
+only the <= 2 event columns (teacher + wrong winner) draw RNG — counter-based
+``fold_in`` keys, never a ``[n_in, n_out]`` uniform matrix — and the whole
+epoch runs as one jitted, donated scan (``column_event_epoch``).  The cost
+accounting that reproduces the paper's 26.0x / 19.5x claims is below.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.esam import cost_model as cm
+
+
+# --------------------------------------------------------------------- #
+# The update rule (functional plane)
+# --------------------------------------------------------------------- #
+def stdp_update_from_uniforms(
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out]
+    pre_spikes: jax.Array,    # bool[n_in]
+    post_events: jax.Array,   # bool[n_out]
+    u_pot: jax.Array,         # float[n_in, n_out] (or broadcastable)
+    u_dep: jax.Array,         # float[n_in, n_out] (or broadcastable)
+    p_pot: float,
+    p_dep: float,
+) -> jax.Array:
+    """The pure stochastic-STDP rule given explicit uniform draws.
+
+    This is the single source of truth for the rule; ``stdp_update`` (keyed),
+    the scan plane, the column-event plane, and the ``kernels/stdp`` Pallas
+    kernels are all bit-exact against it under shared uniforms (tested).
+    """
+    pre = pre_spikes.astype(bool)[:, None]
+    post = post_events.astype(bool)[None, :]
+    potentiate = post & pre & (u_pot < p_pot)
+    depress = post & ~pre & (u_dep < p_dep)
+    new_bits = jnp.where(potentiate, 1, jnp.where(depress, 0, weight_bits))
+    return new_bits.astype(weight_bits.dtype)
 
 
 def stdp_update(
@@ -30,19 +63,61 @@ def stdp_update(
     key: jax.Array,
     p_pot: float = 0.1,
     p_dep: float = 0.05,
+    *,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """One stochastic-STDP event: returns updated weight bits."""
+    """One stochastic-STDP event: returns updated weight bits.
+
+    ``use_kernel=True`` routes the masked rewrite through the Pallas
+    transposed-layout kernel (``kernels/stdp/ops.stdp_update``) instead of the
+    jnp rule — same uniforms, bit-identical output (tested).
+    """
     k1, k2 = jax.random.split(key)
     u_pot = jax.random.uniform(k1, weight_bits.shape)
     u_dep = jax.random.uniform(k2, weight_bits.shape)
-    pre = pre_spikes[:, None]
-    post = post_events[None, :]
-    potentiate = post & pre & (u_pot < p_pot)
-    depress = post & ~pre & (u_dep < p_dep)
-    new_bits = jnp.where(potentiate, 1, jnp.where(depress, 0, weight_bits))
-    return new_bits.astype(weight_bits.dtype)
+    if use_kernel:
+        from repro.kernels.stdp import ops as stdp_ops
+
+        new_t = stdp_ops.stdp_update(
+            weight_bits.T,
+            pre_spikes.astype(jnp.int8),
+            post_events.astype(jnp.int8),
+            u_pot.T,
+            u_dep.T,
+            p_pot=float(p_pot),
+            p_dep=float(p_dep),
+            interpret=interpret,
+        )
+        return new_t.T
+    return stdp_update_from_uniforms(
+        weight_bits, pre_spikes, post_events, u_pot, u_dep, p_pot, p_dep
+    )
 
 
+# --------------------------------------------------------------------- #
+# Column-event RNG: counter-based keys, <= 3 * n_in draws per sample
+# --------------------------------------------------------------------- #
+def column_event_uniforms(
+    key: jax.Array, sample_index: jax.Array, n_in: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-sample uniforms for the <= 2 event columns of supervised STDP.
+
+    Counter-based ``fold_in`` scheme — phase 0 potentiates / phase 1 depresses
+    the teacher column, phase 2 depresses the wrong-winner column.  Both the
+    fused column-event plane and the scan reference draw through this one
+    function, which is what makes them bit-comparable.
+    """
+    ks = jax.random.fold_in(key, sample_index)
+    u_pot = jax.random.uniform(jax.random.fold_in(ks, 0), (n_in,))
+    u_dep_teacher = jax.random.uniform(jax.random.fold_in(ks, 1), (n_in,))
+    u_dep_wrong = jax.random.uniform(jax.random.fold_in(ks, 2), (n_in,))
+    return u_pot, u_dep_teacher, u_dep_wrong
+
+
+# --------------------------------------------------------------------- #
+# Hardware cost accounting (Sec 4.4.1)
+# --------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
 class ColumnUpdateCost:
     cell: str
@@ -91,6 +166,116 @@ def column_update_cost(read_ports: int, rows: int = 128) -> ColumnUpdateCost:
     )
 
 
+# --------------------------------------------------------------------- #
+# Frozen-prefix activations
+# --------------------------------------------------------------------- #
+def last_hidden_spikes(
+    network_bits: list[jax.Array],
+    vth: list[jax.Array],
+    spikes: jax.Array,          # bool[batch, n_in]
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Run the frozen prefix tiles; returns the last tile's input spikes.
+
+    Uses the packed fused plane (PR 1's ``forward_fused_packed`` datapath —
+    uint32 bitplanes between tiles) when every hidden width is 32-aligned,
+    falling back to the dense functional tiles otherwise.  Both are
+    bit-identical (tests/test_packing.py), so the learning plane sees the same
+    pre-synaptic trace either way.
+    """
+    hidden = network_bits[:-1]
+    if hidden and all(w.shape[1] % 32 == 0 for w in hidden):
+        from repro.core import packing
+        from repro.core.esam import network as network_mod
+
+        p = network_mod.packed_prefix(
+            network_bits, vth, packing.pack_spikes(spikes), interpret=interpret)
+        return packing.unpack_spikes(p, hidden[-1].shape[1], dtype=jnp.bool_)
+    from repro.core.esam import tile as tile_mod
+
+    s = spikes
+    for w, th in zip(hidden, vth[:-1]):
+        s, _ = tile_mod.functional_tile(w, s, th)
+    return s
+
+
+def readout_vmem(bits_t: jax.Array, spikes: jax.Array) -> jax.Array:
+    """V_mem = s . (2b - 1) on the transposed-resident ``[n_out, n_in]`` layout.
+
+    Integer arithmetic throughout — bit-identical to ``tile.functional_tile``'s
+    einsum on the row-major layout (summation order is irrelevant for int32).
+    Accepts a single sample ``[n_in]`` or any batch ``[..., n_in]``.
+    """
+    sv = spikes.astype(jnp.int32)
+    w = bits_t.astype(jnp.int32)
+    return 2 * jnp.einsum("...i,oi->...o", sv, w) - sv.sum(-1, keepdims=True)
+
+
+# --------------------------------------------------------------------- #
+# The fused column-event epoch (tentpole plane)
+# --------------------------------------------------------------------- #
+@functools.partial(
+    jax.jit,
+    static_argnames=("p_pot", "p_dep", "interpret"),
+    donate_argnums=(0,),
+)
+def column_event_epoch(
+    bits_t: jax.Array,          # {0,1}[n_out, n_in] transposed-resident layout
+    pre: jax.Array,             # bool[batch, n_in] — last tile's input spikes
+    labels: jax.Array,          # int32[batch]
+    key: jax.Array,
+    *,
+    p_pot: float,
+    p_dep: float,
+    out_offset: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One supervised-STDP epoch fused into a single jitted scan.
+
+    Per sample: last-tile matvec on the transposed-resident bits, argmax
+    readout, teacher / wrong-winner event derivation, and two gated
+    column-port writes (``kernels/stdp.stdp_column_event``).  RNG is drawn
+    only for the event columns (``column_event_uniforms``), the carry keeps
+    the transposed bits resident, and the input buffer is donated — the TPU
+    rendering of the paper's online-learning loop through the column RW port.
+
+    ``out_offset`` shifts the argmax that derives the wrong-winner event, so
+    learning can target the *deployed* readout (the folded conversion offset
+    ``EsamNetwork.forward`` adds before its argmax).  The default ``None``
+    keeps the offset-free vmem argmax of the scan reference (bit-comparable).
+
+    Returns (updated bits_t, number of column updates as a device scalar).
+    """
+    from repro.kernels.stdp import ops as stdp_ops
+
+    n_in = bits_t.shape[1]
+
+    def body(bits_t, inp):
+        s_i, y_i, i = inp
+        vmem = readout_vmem(bits_t, s_i)
+        if out_offset is None:
+            pred = jnp.argmax(vmem)
+        else:
+            pred = jnp.argmax(vmem.astype(jnp.float32) + out_offset)
+        wrong = pred != y_i
+        u_pot, u_dep_t, u_dep_w = column_event_uniforms(key, i, n_in)
+        # teacher column: Hebbian — pull it toward the pre pattern
+        bits_t = stdp_ops.stdp_column_event(
+            bits_t, y_i, wrong, s_i, u_pot, u_dep_t,
+            p_pot=p_pot, p_dep=p_dep, interpret=interpret)
+        # wrong winner: pure depression of active-pre synapses (inverted trace,
+        # potentiation disabled — same rationale as the scan plane)
+        bits_t = stdp_ops.stdp_column_event(
+            bits_t, pred, wrong, jnp.logical_not(s_i), u_dep_w, u_dep_w,
+            p_pot=0.0, p_dep=p_dep, interpret=interpret)
+        return bits_t, wrong
+
+    idx = jnp.arange(pre.shape[0], dtype=jnp.int32)
+    bits_t, wrong = jax.lax.scan(body, bits_t, (pre, labels, idx))
+    return bits_t, 2 * wrong.sum(dtype=jnp.int32)
+
+
 def online_learning_epoch(
     network_bits: list[jax.Array],
     vth: list[jax.Array],
@@ -100,21 +285,58 @@ def online_learning_epoch(
     p_pot: float = 0.12,
     p_dep: float = 0.06,
     pre_spikes: jax.Array | None = None,
+    *,
+    interpret: bool | None = None,
 ):
     """Supervised-STDP pass over a batch for the *last* tile (delta-rule style).
 
     Teacher signal: the correct class neuron is a potentiation event; the
     argmax-wrong neuron is a depression event.  Returns (new last-layer bits,
-    number of column updates) — the count feeds the cost model.
+    number of column updates as an int32 device scalar — cast once at the
+    caller if a host int is needed; the count feeds the cost model).
 
     ``pre_spikes`` takes the last hidden layer's spikes if the caller already
-    ran ``EsamNetwork.forward(..., collect=True)`` — the frozen prefix tiles
-    are then not re-evaluated here.
+    ran ``EsamNetwork.forward(..., collect=True)``; otherwise the frozen
+    prefix runs once through the packed fused plane (``last_hidden_spikes``).
+    The epoch itself is the fused column-event scan (``column_event_epoch``).
+    """
+    s = pre_spikes if pre_spikes is not None else last_hidden_spikes(
+        network_bits, vth, spikes, interpret=interpret)
+    bits_t = jnp.asarray(network_bits[-1]).T
+    bits_t, n_updates = column_event_epoch(
+        bits_t, s.astype(bool), labels, key,
+        p_pot=float(p_pot), p_dep=float(p_dep), interpret=interpret)
+    return bits_t.T, n_updates
+
+
+def online_learning_epoch_scan(
+    network_bits: list[jax.Array],
+    vth: list[jax.Array],
+    spikes: jax.Array,
+    labels: jax.Array,
+    key: jax.Array,
+    p_pot: float = 0.12,
+    p_dep: float = 0.06,
+    pre_spikes: jax.Array | None = None,
+    rng_scheme: str = "matrix",
+):
+    """The PR 1 per-sample scan: full ``[n_in, n_out]`` rewrite every sample.
+
+    Kept as the measured baseline (benchmarks/bench_online_learning.py) and
+    as the bit-identity oracle for the fused plane:
+
+    * ``rng_scheme="matrix"`` — the original behavior: two full
+      ``[n_in, n_out]`` uniform matrices drawn per sample from a split chain.
+    * ``rng_scheme="column"`` — the shared counter-based column scheme
+      (``column_event_uniforms``), broadcast across columns; only the event
+      column's draw ever matters, so this is bit-identical to
+      ``online_learning_epoch`` under the same key (tested).
     """
     from repro.core.esam import tile as tile_mod
 
+    assert rng_scheme in ("matrix", "column"), rng_scheme
     bits_last = network_bits[-1]
-    n_updates = 0
+    n_in, n_out = bits_last.shape
     if pre_spikes is not None:
         s = pre_spikes
     else:
@@ -123,23 +345,33 @@ def online_learning_epoch(
             s, _ = tile_mod.functional_tile(w, s, th)
 
     def body(carry, inp):
-        bits, key = carry
-        s_i, y_i = inp
+        bits, k = carry
+        s_i, y_i, i = inp
         _, vmem = tile_mod.functional_tile(bits, s_i, vth[-1])
         pred = jnp.argmax(vmem)
         wrong = pred != y_i
-        post_pot = jax.nn.one_hot(y_i, bits.shape[1], dtype=bool) & wrong
-        post_dep = jax.nn.one_hot(pred, bits.shape[1], dtype=bool) & wrong
-        key, k1, k2 = jax.random.split(key, 3)
-        # correct neuron: Hebbian — pull its column toward the pre pattern
-        bits = stdp_update(bits, s_i, post_pot, k1, p_pot, p_dep)
-        # wrong winner: pure depression of active-pre synapses (bit -> 0).
-        # Expressed via stdp_update with the pre trace inverted and
-        # potentiation disabled — potentiating silent positions would *raise*
-        # the winner's response to shifted variants instead of suppressing it.
-        bits = stdp_update(bits, ~s_i, post_dep, k2, 0.0, p_dep)
-        return (bits, key), wrong.astype(jnp.int32) * 2
+        post_pot = jax.nn.one_hot(y_i, n_out, dtype=bool) & wrong
+        post_dep = jax.nn.one_hot(pred, n_out, dtype=bool) & wrong
+        if rng_scheme == "matrix":
+            k, k1, k2 = jax.random.split(k, 3)
+            # correct neuron: Hebbian — pull its column toward the pre pattern
+            bits = stdp_update(bits, s_i, post_pot, k1, p_pot, p_dep)
+            # wrong winner: pure depression of active-pre synapses (bit -> 0).
+            # Expressed via stdp_update with the pre trace inverted and
+            # potentiation disabled — potentiating silent positions would
+            # *raise* the winner's response to shifted variants instead of
+            # suppressing it.
+            bits = stdp_update(bits, ~s_i, post_dep, k2, 0.0, p_dep)
+        else:
+            u_pot, u_dep_t, u_dep_w = column_event_uniforms(key, i, n_in)
+            bits = stdp_update_from_uniforms(
+                bits, s_i, post_pot, u_pot[:, None], u_dep_t[:, None],
+                p_pot, p_dep)
+            bits = stdp_update_from_uniforms(
+                bits, ~s_i, post_dep, u_dep_w[:, None], u_dep_w[:, None],
+                0.0, p_dep)
+        return (bits, k), wrong.astype(jnp.int32) * 2
 
-    (bits_last, _), upd = jax.lax.scan(body, (bits_last, key), (s, labels))
-    n_updates = int(upd.sum())
-    return bits_last, n_updates
+    idx = jnp.arange(s.shape[0], dtype=jnp.int32)
+    (bits_last, _), upd = jax.lax.scan(body, (bits_last, key), (s, labels, idx))
+    return bits_last, upd.sum()

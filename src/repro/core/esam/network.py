@@ -114,24 +114,28 @@ class EsamNetwork:
         logits = self.forward_fused_packed(packed, interpret=interpret)
         return logits.reshape(*lead, logits.shape[-1])
 
+    def forward_prefix_packed(
+        self, packed: jax.Array, *, interpret: bool | None = None
+    ) -> jax.Array:
+        """Run only the frozen hidden tiles on the packed plane.
+
+        Takes and returns the uint32 bitplane wire format: the result is the
+        last tile's *input* spike plane, uint32[B, n_hidden/32].  This is the
+        prefix the online-learning plane consumes (via the module-level
+        ``packed_prefix``) — the learned last tile is excluded, so the prefix
+        can be computed once and reused across epochs.
+        """
+        return packed_prefix(
+            self.weight_bits, self.vth, packed, interpret=interpret
+        )
+
     def forward_fused_packed(
         self, packed: jax.Array, *, interpret: bool | None = None
     ) -> jax.Array:
-        """Fused cascade over pre-packed spikes uint32[B, ceil(n_in/32)].
-
-        Hidden widths must be multiples of 32 (they are 128-aligned tile
-        columns in every paper topology) so fired planes re-pack exactly.
-        """
+        """Fused cascade over pre-packed spikes uint32[B, ceil(n_in/32)]."""
         from repro.kernels.cim_matmul_packed import ops as packed_ops
 
-        for w in self.weight_bits[:-1]:
-            assert w.shape[1] % 32 == 0, (
-                "hidden width must be 32-aligned for the packed plane",
-                w.shape,
-            )
-        p = packed
-        for w, th in zip(self.weight_bits[:-1], self.vth[:-1]):
-            p = packed_ops.esam_layer_packed(p, w, th, interpret=interpret)
+        p = self.forward_prefix_packed(packed, interpret=interpret)
         vmem = packed_ops.cim_matmul_packed(
             p, self.weight_bits[-1], interpret=interpret
         )
@@ -176,6 +180,37 @@ class EsamNetwork:
             s = tr.out_spikes
         logits = traces[-1].vmem_final.astype(jnp.float32) + self.out_offset
         return logits, traces
+
+
+def packed_prefix(
+    weight_bits: Sequence[jax.Array],
+    vth: Sequence[jax.Array],
+    packed: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Cascade the hidden tiles (all but the last) on the packed plane.
+
+    The single source of the packed prefix datapath: both inference
+    (``EsamNetwork.forward_prefix_packed`` / ``forward_fused_packed``) and the
+    online-learning plane (``learning.last_hidden_spikes``) run their frozen
+    tiles through here, so the learning plane's pre-synaptic trace can never
+    desynchronize from the serving datapath.
+
+    Hidden widths must be multiples of 32 (they are 128-aligned tile columns
+    in every paper topology) so fired planes re-pack exactly.
+    """
+    from repro.kernels.cim_matmul_packed import ops as packed_ops
+
+    for w in weight_bits[:-1]:
+        assert w.shape[1] % 32 == 0, (
+            "hidden width must be 32-aligned for the packed plane",
+            w.shape,
+        )
+    p = packed
+    for w, th in zip(weight_bits[:-1], vth[:-1]):
+        p = packed_ops.esam_layer_packed(p, w, th, interpret=interpret)
+    return p
 
 
 # ---------------------------------------------------------------------- #

@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import default_interpret
 
@@ -69,3 +70,64 @@ def stdp_update(
         out_shape=jax.ShapeDtypeStruct((n_out, n_in), bits_t.dtype),
         interpret=interpret,
     )(bits_t, pre[None, :], post[:, None], u_pot, u_dep)
+
+
+def _column_event_kernel(idx_ref, bits_ref, pre_ref, upot_ref, udep_ref, out_ref,
+                         *, p_pot: float, p_dep: float):
+    bits = bits_ref[...]                       # [1, bn] — the event column only
+    pre = pre_ref[...].astype(bool)
+    apply = idx_ref[1] > 0
+    potentiate = pre & (upot_ref[...] < p_pot)
+    depress = jnp.logical_not(pre) & (udep_ref[...] < p_dep)
+    new = jnp.where(potentiate, 1, jnp.where(depress, 0, bits)).astype(bits.dtype)
+    out_ref[...] = jnp.where(apply, new, bits)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p_pot", "p_dep", "block_in", "interpret")
+)
+def stdp_column_event(
+    bits_t: jax.Array,   # {0,1}[N_out, N_in] transposed weight layout
+    col: jax.Array,      # int32[] — the learning neuron (one column port access)
+    apply: jax.Array,    # bool[] — gate; the write is suppressed when False
+    pre: jax.Array,      # {0,1}[N_in] pre-synaptic activity trace
+    u_pot: jax.Array,    # float32[N_in]
+    u_dep: jax.Array,    # float32[N_in]
+    *,
+    p_pot: float,
+    p_dep: float,
+    block_in: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked column write: update ONE learning neuron's synapses in place.
+
+    The grid covers only the event column's ``N_in`` synapses (selected by a
+    scalar-prefetched row index into the transposed-resident layout); every
+    other weight stays untouched through ``input_output_aliases`` — the TPU
+    rendering of the 2x4-cycle transposable-port column RMW (Sec 4.4.1),
+    instead of rewriting the full ``[N_in, N_out]`` matrix per event.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n_out, n_in = bits_t.shape
+    # largest block <= block_in that divides n_in (keeps the grid small for
+    # widths that share few factors with block_in)
+    bn = next(b for b in range(min(block_in, n_in), 0, -1) if n_in % b == 0)
+    idx = jnp.stack([jnp.asarray(col, jnp.int32), apply.astype(jnp.int32)])
+    return pl.pallas_call(
+        functools.partial(_column_event_kernel, p_pot=p_pot, p_dep=p_dep),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_in // bn,),
+            in_specs=[
+                pl.BlockSpec((1, bn), lambda j, idx: (idx[0], j)),
+                pl.BlockSpec((1, bn), lambda j, idx: (0, j)),
+                pl.BlockSpec((1, bn), lambda j, idx: (0, j)),
+                pl.BlockSpec((1, bn), lambda j, idx: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bn), lambda j, idx: (idx[0], j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_out, n_in), bits_t.dtype),
+        input_output_aliases={1: 0},   # bits_t buffer is the output buffer
+        interpret=interpret,
+    )(idx, bits_t, pre.astype(jnp.int8)[None, :], u_pot[None, :], u_dep[None, :])

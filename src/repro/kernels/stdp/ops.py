@@ -1,6 +1,19 @@
-"""Jit'd public wrappers for the STDP kernel."""
+"""Jit'd public wrappers for the STDP kernels.
 
-from repro.kernels.stdp.kernel import stdp_update
-from repro.kernels.stdp.ref import stdp_update_ref
+``stdp_update`` is the full-matrix transposed-layout update (one masked
+rewrite of the whole tile); ``stdp_column_event`` is the column-event form the
+online-learning plane actually issues — one learning neuron per call, grid
+over that column's synapses only (see kernel.py).  Both are validated
+bit-exact against the ref.py oracles and the functional rule in
+``core.esam.learning`` under shared uniforms.
+"""
 
-__all__ = ["stdp_update", "stdp_update_ref"]
+from repro.kernels.stdp.kernel import stdp_column_event, stdp_update
+from repro.kernels.stdp.ref import stdp_column_event_ref, stdp_update_ref
+
+__all__ = [
+    "stdp_update",
+    "stdp_update_ref",
+    "stdp_column_event",
+    "stdp_column_event_ref",
+]

@@ -22,3 +22,27 @@ def stdp_update_ref(
     depress = post_m & ~pre_m & (u_dep < p_dep)
     new = jnp.where(potentiate, 1, jnp.where(depress, 0, bits_t))
     return new.astype(bits_t.dtype)
+
+
+def stdp_column_event_ref(
+    bits_t: jax.Array,    # {0,1}[N_out, N_in] transposed weight layout
+    col: jax.Array,       # int32[] — index of the learning neuron (one column)
+    apply: jax.Array,     # bool[] — gate; identity when False
+    pre: jax.Array,       # {0,1}[N_in] pre-synaptic activity trace
+    u_pot: jax.Array,     # float[N_in] uniforms for potentiation
+    u_dep: jax.Array,     # float[N_in] uniforms for depression
+    p_pot: float,
+    p_dep: float,
+) -> jax.Array:
+    """One column event: stochastic STDP applied to a single learning neuron.
+
+    Only row ``col`` of the transposed layout (= one weight column, all
+    synapses of one post neuron) may change — the column-port access pattern.
+    """
+    old = bits_t[col]
+    pre_m = pre.astype(bool)
+    potentiate = pre_m & (u_pot < p_pot)
+    depress = ~pre_m & (u_dep < p_dep)
+    new = jnp.where(potentiate, 1, jnp.where(depress, 0, old)).astype(bits_t.dtype)
+    new = jnp.where(apply, new, old)
+    return bits_t.at[col].set(new)

@@ -1,0 +1,146 @@
+"""Multi-epoch online-learning driver on the fused column-event plane.
+
+The deployment story of Sec 4.4.1: a converted SNN ships with frozen hidden
+tiles and adapts its readout on-device through supervised stochastic STDP,
+every weight update a column access through the transposable port.  This
+driver scales that loop to real batch counts:
+
+* the frozen prefix runs ONCE through the packed fused plane
+  (``learning.last_hidden_spikes``) and is reused across every epoch — the
+  hidden tiles never learn, so their activations never change;
+* the last-layer bits stay transposed-resident (``{0,1}[n_out, n_in]``)
+  across epochs, fed straight back into ``learning.column_event_epoch``
+  whose donated carry updates them in place;
+* accuracy is tracked per epoch from the resident layout (one readout
+  matvec, no re-transposition), and checkpoints are written through
+  ``repro.checkpoint.io`` in the network's native ``[n_in, n_out]`` layout so
+  they stay compatible with ``EsamNetwork`` consumers and resume.
+
+Run the example: ``PYTHONPATH=src python examples/online_learning.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.esam import learning
+from repro.core.esam.network import EsamNetwork
+
+
+@jax.jit
+def _readout_accuracy(bits_t, pre, labels, out_offset):
+    """argmax accuracy of the transposed-resident readout on (pre, labels)."""
+    logits = learning.readout_vmem(bits_t, pre).astype(jnp.float32) + out_offset
+    return (jnp.argmax(logits, -1) == labels).mean()
+
+
+@dataclasses.dataclass
+class OnlineTrainResult:
+    network: EsamNetwork        # prefix unchanged, learned last tile swapped in
+    accuracy: list[float]       # eval accuracy after each epoch run
+    n_updates: list[int]        # column updates per epoch (feeds the cost model)
+    start_epoch: int            # 0, or where a resumed run picked up
+    epochs_run: int
+
+
+def _checkpoint_tree(network: EsamNetwork, bits_t: jax.Array) -> dict:
+    return {"weight_bits": list(network.weight_bits[:-1]) + [bits_t.T]}
+
+
+def train_online(
+    network: EsamNetwork,
+    spikes: jax.Array,           # bool[batch, n_in]
+    labels: jax.Array,           # int32[batch]
+    *,
+    epochs: int = 5,
+    key: jax.Array | None = None,
+    p_pot: float = 0.12,
+    p_dep: float = 0.06,
+    eval_spikes: jax.Array | None = None,
+    eval_labels: jax.Array | None = None,
+    shuffle: bool = False,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
+    interpret: bool | None = None,
+) -> OnlineTrainResult:
+    """Supervised-STDP training of the readout tile over multiple epochs.
+
+    Evaluation defaults to the training set when no eval split is given.
+    ``shuffle=True`` permutes the sample order per epoch (keyed off the epoch
+    key, deterministic).  With ``checkpoint_dir`` set, the full weight list is
+    checkpointed every ``checkpoint_every`` epochs (and at the end);
+    ``resume=True`` restarts from the latest step found there.
+    """
+    from repro.checkpoint import io as ckpt_io
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if (eval_spikes is None) != (eval_labels is None):
+        raise ValueError("eval_spikes and eval_labels must be given together")
+    spikes = jnp.asarray(spikes).astype(bool)
+    labels = jnp.asarray(labels)
+    pre = learning.last_hidden_spikes(
+        network.weight_bits, network.vth, spikes, interpret=interpret)
+    if eval_spikes is None:
+        eval_pre, eval_labels = pre, labels
+    else:
+        eval_pre = learning.last_hidden_spikes(
+            network.weight_bits, network.vth,
+            jnp.asarray(eval_spikes).astype(bool), interpret=interpret)
+        eval_labels = jnp.asarray(eval_labels)
+
+    bits_t = jnp.asarray(network.weight_bits[-1]).T
+    start_epoch = 0
+    if resume and checkpoint_dir is not None:
+        step = ckpt_io.latest_step(checkpoint_dir)
+        if step is not None:
+            restored, _ = ckpt_io.restore(
+                _checkpoint_tree(network, bits_t), checkpoint_dir, step)
+            bits_t = jnp.asarray(restored["weight_bits"][-1]).T
+            start_epoch = step
+
+    n_samples = int(spikes.shape[0])
+    accuracy: list[float] = []
+    n_updates: list[int] = []
+    for epoch in range(start_epoch, epochs):
+        ep_key = jax.random.fold_in(key, epoch)
+        if shuffle:
+            # sample draws fold in indices 0..n_samples-1; n_samples is free
+            perm = jax.random.permutation(
+                jax.random.fold_in(ep_key, n_samples), n_samples)
+            x_e, y_e = pre[perm], labels[perm]
+        else:
+            x_e, y_e = pre, labels
+        # learning events target the deployed readout: the wrong winner is the
+        # argmax of the offset-shifted logits, matching _readout_accuracy and
+        # EsamNetwork.forward
+        bits_t, n = learning.column_event_epoch(
+            bits_t, x_e, y_e, ep_key,
+            p_pot=float(p_pot), p_dep=float(p_dep),
+            out_offset=network.out_offset, interpret=interpret)
+        acc = _readout_accuracy(bits_t, eval_pre, eval_labels, network.out_offset)
+        accuracy.append(float(acc))
+        n_updates.append(int(n))
+        at_end = epoch + 1 == epochs
+        if checkpoint_dir is not None and (
+            at_end or (checkpoint_every and (epoch + 1) % checkpoint_every == 0)
+        ):
+            ckpt_io.save(
+                _checkpoint_tree(network, bits_t), checkpoint_dir, epoch + 1,
+                extra={"accuracy": accuracy[-1], "n_updates": n_updates[-1]})
+
+    new_net = dataclasses.replace(
+        network,
+        weight_bits=list(network.weight_bits[:-1]) + [bits_t.T],
+    )
+    return OnlineTrainResult(
+        network=new_net,
+        accuracy=accuracy,
+        n_updates=n_updates,
+        start_epoch=start_epoch,
+        epochs_run=len(accuracy),
+    )

@@ -48,7 +48,7 @@ def test_online_learning_improves_readout():
         bits, n = learning.online_learning_epoch(
             [bits], vth, x, y, jax.random.PRNGKey(10 + epoch), p_pot=0.2, p_dep=0.1
         )
-        n_upd += n
+        n_upd += int(n)          # device scalar — cast once at the caller
     acc1 = accuracy(bits)
     assert acc0 < 0.25                      # random readout is near chance
     assert acc1 > acc0 + 0.3, (acc0, acc1)  # online STDP learns prototypes
@@ -80,7 +80,21 @@ def test_online_learning_epoch_accepts_precomputed_pre_spikes():
         bits, vth, x, y, jax.random.PRNGKey(9), p_pot=0.3, p_dep=0.15,
         pre_spikes=per_layer[-1])
     np.testing.assert_array_equal(np.asarray(new_a), np.asarray(new_b))
-    assert n_a == n_b
+    assert int(n_a) == int(n_b)
+
+
+def test_online_learning_epoch_count_is_device_array():
+    """The update count stays on device — no host sync inside the epoch."""
+    x, y = digits.make_spike_dataset(16, seed=5)
+    x, y = jnp.asarray(x).astype(bool), jnp.asarray(y)
+    bits = jax.random.bernoulli(jax.random.PRNGKey(2), 0.5, (768, 10)).astype(jnp.int8)
+    vth = [jnp.full((10,), 2**31 - 1, jnp.int32)]
+    _, n = learning.online_learning_epoch(
+        [bits], vth, x, y, jax.random.PRNGKey(0), p_pot=0.2, p_dep=0.1)
+    assert isinstance(n, jax.Array) and n.dtype == jnp.int32 and n.ndim == 0
+    _, n_scan = learning.online_learning_epoch_scan(
+        [bits], vth, x, y, jax.random.PRNGKey(0), p_pot=0.2, p_dep=0.1)
+    assert isinstance(n_scan, jax.Array) and n_scan.ndim == 0
 
 
 def test_learning_cost_scales_with_columns():

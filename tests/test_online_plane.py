@@ -1,0 +1,281 @@
+"""Column-event online-learning plane: the fused transposable-port epoch.
+
+Covers the PR-2 tentpole: 3-way STDP rule equivalence (functional rule vs
+Pallas transposed-layout kernel vs jnp oracle under shared uniforms), the
+column-event kernel's blocked in-place write, bit-identity of the fused epoch
+against the scan reference under the shared key-folding scheme, multi-tile
+learning through the packed prefix, and the multi-epoch train/online driver
+(accuracy tracking, checkpointing, resume).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.esam import learning, tile
+from repro.core.esam.network import EsamNetwork
+from repro.data import digits
+from repro.kernels.stdp import ops as stdp_ops
+from repro.train import online as online_train
+
+
+# ----------------------------------------------------------------------- #
+# STDP rule: functional plane vs Pallas kernel vs oracle (shared uniforms)
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("n_in,n_out", [(128, 16), (256, 128), (64, 8)])
+@pytest.mark.parametrize("p_pot,p_dep", [(0.0, 0.0), (1.0, 1.0), (0.3, 0.1)])
+def test_stdp_three_way_equivalence(n_in, n_out, p_pot, p_dep):
+    """learning rule == Pallas transposed kernel == stdp/ref, bit-exact."""
+    key = jax.random.PRNGKey(n_in + n_out)
+    ks = jax.random.split(key, 5)
+    bits = jax.random.bernoulli(ks[0], 0.5, (n_in, n_out)).astype(jnp.int8)
+    pre = jax.random.bernoulli(ks[1], 0.4, (n_in,))
+    post = jax.random.bernoulli(ks[2], 0.3, (n_out,))
+    u_pot = jax.random.uniform(ks[3], (n_in, n_out))
+    u_dep = jax.random.uniform(ks[4], (n_in, n_out))
+
+    functional = learning.stdp_update_from_uniforms(
+        bits, pre, post, u_pot, u_dep, p_pot, p_dep)
+    kernel = stdp_ops.stdp_update(
+        bits.T, pre.astype(jnp.int8), post.astype(jnp.int8), u_pot.T, u_dep.T,
+        p_pot=p_pot, p_dep=p_dep, interpret=True)
+    oracle = stdp_ops.stdp_update_ref(
+        bits.T, pre, post, u_pot.T, u_dep.T, p_pot, p_dep)
+    np.testing.assert_array_equal(np.asarray(functional), np.asarray(kernel.T))
+    np.testing.assert_array_equal(np.asarray(kernel), np.asarray(oracle))
+
+
+def test_stdp_update_use_kernel_routes_through_pallas():
+    """learning.stdp_update(use_kernel=True) == the functional path, same key."""
+    key = jax.random.PRNGKey(3)
+    bits = jax.random.bernoulli(key, 0.5, (128, 32)).astype(jnp.int8)
+    pre = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (128,))
+    post = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.4, (32,))
+    a = learning.stdp_update(bits, pre, post, jax.random.fold_in(key, 3), 0.3, 0.2)
+    b = learning.stdp_update(bits, pre, post, jax.random.fold_in(key, 3), 0.3, 0.2,
+                             use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------- #
+# Column-event kernel: blocked in-place write of one learning neuron
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("n_out,n_in", [(10, 768), (16, 256), (128, 128),
+                                        (10, 384), (8, 100)])  # non-256-multiples
+@pytest.mark.parametrize("p_pot,p_dep", [(1.0, 1.0), (0.25, 0.1)])
+def test_column_event_kernel_matches_ref(n_out, n_in, p_pot, p_dep):
+    key = jax.random.PRNGKey(n_out * n_in)
+    ks = jax.random.split(key, 4)
+    bits_t = jax.random.bernoulli(ks[0], 0.5, (n_out, n_in)).astype(jnp.int8)
+    pre = jax.random.bernoulli(ks[1], 0.4, (n_in,))
+    u_pot = jax.random.uniform(ks[2], (n_in,))
+    u_dep = jax.random.uniform(ks[3], (n_in,))
+    col = jnp.asarray(n_out // 2, jnp.int32)
+    for apply in (True, False):
+        out = stdp_ops.stdp_column_event(
+            bits_t, col, jnp.asarray(apply), pre, u_pot, u_dep,
+            p_pot=p_pot, p_dep=p_dep, interpret=True)
+        ref = stdp_ops.stdp_column_event_ref(
+            bits_t, col, jnp.asarray(apply), pre, u_pot, u_dep, p_pot, p_dep)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        # the column port touches exactly one row of the transposed layout
+        others = np.delete(np.asarray(out), int(col), axis=0)
+        np.testing.assert_array_equal(
+            others, np.delete(np.asarray(bits_t), int(col), axis=0))
+        if not apply:
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(bits_t))
+
+
+def test_column_event_kernel_matches_full_matrix_rule():
+    """A gated column event == the full-matrix rule with a one-hot post mask."""
+    key = jax.random.PRNGKey(9)
+    n_in, n_out = 256, 16
+    bits = jax.random.bernoulli(key, 0.5, (n_in, n_out)).astype(jnp.int8)
+    pre = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n_in,))
+    u_pot = jax.random.uniform(jax.random.fold_in(key, 2), (n_in,))
+    u_dep = jax.random.uniform(jax.random.fold_in(key, 3), (n_in,))
+    col = jnp.asarray(7, jnp.int32)
+    out_t = stdp_ops.stdp_column_event(
+        bits.T, col, jnp.asarray(True), pre, u_pot, u_dep,
+        p_pot=0.4, p_dep=0.2, interpret=True)
+    full = learning.stdp_update_from_uniforms(
+        bits, pre, jax.nn.one_hot(col, n_out, dtype=bool),
+        u_pot[:, None], u_dep[:, None], 0.4, 0.2)
+    np.testing.assert_array_equal(np.asarray(out_t.T), np.asarray(full))
+
+
+# ----------------------------------------------------------------------- #
+# Fused epoch vs scan reference: bit-identity under the shared key scheme
+# ----------------------------------------------------------------------- #
+@given(data=st.data())
+@settings(max_examples=12, deadline=None)
+def test_column_event_epoch_bit_identical_to_scan(data):
+    n_in = data.draw(st.sampled_from([64, 128, 256]))
+    n_out = data.draw(st.sampled_from([8, 10, 16]))
+    batch = data.draw(st.integers(1, 24))
+    density = data.draw(st.floats(0.0, 1.0))
+    seed = data.draw(st.integers(0, 2**16))
+    p_pot = data.draw(st.floats(0.0, 1.0))
+    p_dep = data.draw(st.floats(0.0, 1.0))
+    key = jax.random.PRNGKey(seed)
+    bits = jax.random.bernoulli(key, 0.5, (n_in, n_out)).astype(jnp.int8)
+    x = jax.random.bernoulli(jax.random.fold_in(key, 1), density, (batch, n_in))
+    y = jax.random.randint(jax.random.fold_in(key, 2), (batch,), 0, n_out, jnp.int32)
+    vth = [jnp.full((n_out,), 2**31 - 1, jnp.int32)]
+    ep_key = jax.random.fold_in(key, 3)
+
+    b_fused, n_fused = learning.online_learning_epoch(
+        [bits], vth, x, y, ep_key, p_pot=p_pot, p_dep=p_dep)
+    b_scan, n_scan = learning.online_learning_epoch_scan(
+        [bits], vth, x, y, ep_key, p_pot=p_pot, p_dep=p_dep, rng_scheme="column")
+    np.testing.assert_array_equal(np.asarray(b_fused), np.asarray(b_scan))
+    assert int(n_fused) == int(n_scan)
+
+
+def test_fused_epoch_matches_scan_through_hidden_tiles():
+    """Packed-prefix fused epoch == functional-prefix scan, multi-tile."""
+    topo = (128, 64, 10)
+    key = jax.random.PRNGKey(4)
+    bits = [
+        jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i + 1])).astype(jnp.int8)
+        for i in range(2)
+    ]
+    vth = [jax.random.randint(jax.random.fold_in(key, 10), (64,), -5, 5, jnp.int32),
+           jnp.full((10,), 2**31 - 1, jnp.int32)]
+    x = jax.random.bernoulli(jax.random.fold_in(key, 20), 0.4, (48, 128))
+    y = jax.random.randint(jax.random.fold_in(key, 21), (48,), 0, 10, jnp.int32)
+    b_fused, n_f = learning.online_learning_epoch(
+        bits, vth, x, y, jax.random.PRNGKey(9), p_pot=0.3, p_dep=0.15)
+    b_scan, n_s = learning.online_learning_epoch_scan(
+        bits, vth, x, y, jax.random.PRNGKey(9), p_pot=0.3, p_dep=0.15,
+        rng_scheme="column")
+    np.testing.assert_array_equal(np.asarray(b_fused), np.asarray(b_scan))
+    assert int(n_f) == int(n_s)
+
+
+def test_multi_tile_learning_improves_accuracy_packed_prefix():
+    """768:256:10 net: supervised STDP on the readout learns through the
+    frozen random hidden tile, prefix on the packed plane (Sec 4.4.1's
+    on-device adaptation use case at paper scale)."""
+    topo = (768, 256, 10)
+    key = jax.random.PRNGKey(0)
+    bits = [
+        jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i + 1])).astype(jnp.int8)
+        for i in range(2)
+    ]
+    vth = [jnp.zeros((256,), jnp.int32), jnp.full((10,), 2**31 - 1, jnp.int32)]
+    x, y = digits.make_spike_dataset(512, seed=3)
+    x, y = jnp.asarray(x).astype(bool), jnp.asarray(y)
+    pre = learning.last_hidden_spikes(bits, vth, x)
+
+    def accuracy(b_last):
+        _, vmem = tile.functional_tile(b_last, pre, vth[-1])
+        return float((vmem.argmax(-1) == y).mean())
+
+    acc0 = accuracy(bits[-1])
+    b = bits[-1]
+    for epoch in range(6):
+        b, _ = learning.online_learning_epoch(
+            [bits[0], b], vth, x, y, jax.random.PRNGKey(10 + epoch),
+            p_pot=0.2, p_dep=0.1, pre_spikes=pre)
+    acc1 = accuracy(b)
+    assert acc0 < 0.2, acc0                 # random readout is near chance
+    assert acc1 > acc0 + 0.1, (acc0, acc1)  # STDP learns through the prefix
+
+
+# ----------------------------------------------------------------------- #
+# train/online.py: the multi-epoch driver
+# ----------------------------------------------------------------------- #
+def _driver_fixture():
+    topo = (768, 64, 10)
+    key = jax.random.PRNGKey(1)
+    bits = [
+        jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i + 1])).astype(jnp.int8)
+        for i in range(2)
+    ]
+    vth = [jnp.zeros((64,), jnp.int32), jnp.full((10,), 2**31 - 1, jnp.int32)]
+    net = EsamNetwork(weight_bits=bits, vth=vth, out_offset=jnp.zeros((10,)))
+    x, y = digits.make_spike_dataset(256, seed=11)
+    return net, jnp.asarray(x).astype(bool), jnp.asarray(y)
+
+
+def test_train_online_tracks_accuracy_and_updates():
+    net, x, y = _driver_fixture()
+    res = online_train.train_online(
+        net, x, y, epochs=4, key=jax.random.PRNGKey(5), p_pot=0.2, p_dep=0.1)
+    assert res.epochs_run == 4 and res.start_epoch == 0
+    assert len(res.accuracy) == 4 and len(res.n_updates) == 4
+    assert all(n > 0 for n in res.n_updates)
+    # the driver's resident-layout accuracy matches the network-level readout
+    logits = res.network.forward(x)
+    acc = float((jnp.argmax(logits, -1) == y).mean())
+    assert abs(acc - res.accuracy[-1]) < 1e-6
+    # prefix tiles are untouched; the readout actually learned
+    np.testing.assert_array_equal(
+        np.asarray(res.network.weight_bits[0]), np.asarray(net.weight_bits[0]))
+    assert res.accuracy[-1] > 0.2
+
+
+def test_train_online_checkpoint_resume_bit_identical(tmp_path):
+    """2 epochs + checkpoint + resume to 4 == straight 4-epoch run."""
+    net, x, y = _driver_fixture()
+    key = jax.random.PRNGKey(5)
+    straight = online_train.train_online(
+        net, x, y, epochs=4, key=key, p_pot=0.2, p_dep=0.1)
+
+    ckpt = str(tmp_path / "online")
+    first = online_train.train_online(
+        net, x, y, epochs=2, key=key, p_pot=0.2, p_dep=0.1,
+        checkpoint_dir=ckpt, checkpoint_every=1)
+    assert first.epochs_run == 2
+    resumed = online_train.train_online(
+        net, x, y, epochs=4, key=key, p_pot=0.2, p_dep=0.1,
+        checkpoint_dir=ckpt, resume=True)
+    assert resumed.start_epoch == 2 and resumed.epochs_run == 2
+    np.testing.assert_array_equal(
+        np.asarray(resumed.network.weight_bits[-1]),
+        np.asarray(straight.network.weight_bits[-1]))
+    assert resumed.accuracy[-1] == straight.accuracy[-1]
+
+
+def test_train_online_rejects_partial_eval_split():
+    net, x, y = _driver_fixture()
+    with pytest.raises(ValueError, match="eval_labels"):
+        online_train.train_online(net, x, y, epochs=1, eval_spikes=x)
+    with pytest.raises(ValueError, match="eval_labels"):
+        online_train.train_online(net, x, y, epochs=1, eval_labels=y)
+
+
+def test_train_online_learns_against_deployed_offset_readout():
+    """With a folded out_offset, the driver's events target the offset-shifted
+    argmax (the deployed winner), and its tracked accuracy still matches the
+    network-level forward readout."""
+    import dataclasses
+
+    net, x, y = _driver_fixture()
+    offset = jnp.linspace(-3.0, 3.0, 10)
+    net = dataclasses.replace(net, out_offset=offset)
+    res = online_train.train_online(
+        net, x, y, epochs=3, key=jax.random.PRNGKey(6), p_pot=0.2, p_dep=0.1)
+    logits = res.network.forward(x)
+    acc = float((jnp.argmax(logits, -1) == y).mean())
+    assert abs(acc - res.accuracy[-1]) < 1e-6
+    assert res.accuracy[-1] > 0.2
+
+
+def test_train_online_shuffle_is_deterministic():
+    net, x, y = _driver_fixture()
+    a = online_train.train_online(
+        net, x, y, epochs=2, key=jax.random.PRNGKey(7), shuffle=True)
+    b = online_train.train_online(
+        net, x, y, epochs=2, key=jax.random.PRNGKey(7), shuffle=True)
+    np.testing.assert_array_equal(
+        np.asarray(a.network.weight_bits[-1]),
+        np.asarray(b.network.weight_bits[-1]))
+    assert a.n_updates == b.n_updates
