@@ -47,9 +47,8 @@ def _hw_cost(n_updates: int) -> str:
 
 
 def _timed_epoch(fn, bits):
-    """Warm up (compile) once, then median of 3 measured runs."""
-    jax.block_until_ready(fn(bits))
-    us, (new_bits, n) = time_call(fn, bits, repeats=3)
+    """Median of 3 measured runs (time_call warms up / compiles once first)."""
+    us, (new_bits, n) = time_call(fn, bits, repeats=3, warmup=1)
     return us, new_bits, int(n)
 
 

@@ -87,8 +87,10 @@ def _train(mode: str, steps: int = 250):
 
 
 def run():
-    us_d, (loss_dense, _) = time_call(lambda: _train("dense"), repeats=1)
-    us_s, (loss_spike, rate) = time_call(lambda: _train("spiking"), repeats=1)
+    # warmup=0: whole multi-step training runs (too expensive to run twice;
+    # compile amortizes across the steps).
+    us_d, (loss_dense, _) = time_call(lambda: _train("dense"), repeats=1, warmup=0)
+    us_s, (loss_spike, rate) = time_call(lambda: _train("spiking"), repeats=1, warmup=0)
     # ESAM hardware cost of the measured activity for one token's FFN MAC:
     # events = rate * D rows; a 4R tile drains them in ceil(events/4) cycles.
     events = rate * D

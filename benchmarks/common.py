@@ -8,10 +8,20 @@ import time
 from typing import Callable
 
 
-def time_call(fn: Callable, *args, repeats: int = 3, **kwargs) -> tuple[float, object]:
-    """Median wall-time (us) of fn(*args) with jax block_until_ready."""
+def time_call(
+    fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kwargs
+) -> tuple[float, object]:
+    """Median wall-time (us) of fn(*args) with jax block_until_ready.
+
+    ``warmup`` calls run (and are fully awaited) before the timed ones, so by
+    default no benchmark reports first-call compile time.  Pass ``warmup=0``
+    only where the timed section is a long multi-step run that would be too
+    expensive to execute twice (compile then amortizes inside it).
+    """
     import jax
 
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
     out = None
     times = []
     for _ in range(repeats):

@@ -63,6 +63,30 @@ def priority_grants_oracle(requests: np.ndarray, ports: int):
     return grants, r, valid
 
 
+def grant_cycles(requests: jax.Array, ports: int) -> jax.Array:
+    """Closed-form port schedule: the clock cycle at which each request is
+    granted, with no sequential arbitration loop.
+
+    The cascade in :func:`priority_grants` serves requests strictly in rank
+    order, p per cycle, so a request whose in-group rank is r is granted at
+    cycle ``r // p`` — the whole drain is a static schedule (the same
+    property event-driven CIM schedulers exploit; see kernels/arbiter).
+
+    Args:
+      requests: bool/{0,1}[..., W] — request vector(s) of one row group.
+      ports: p.
+    Returns:
+      int32[..., W] — grant cycle per lane; non-request lanes carry the
+      sentinel ``ceil(W / p)`` (one past the last schedulable cycle), so the
+      result doubles as a segment id for cycle-keyed segment sums.
+    """
+    r = requests.astype(jnp.int32)
+    w = r.shape[-1]
+    n_cycles = -(-w // ports)
+    rank = jnp.cumsum(r, axis=-1) - 1
+    return jnp.where(r == 1, rank // ports, n_cycles).astype(jnp.int32)
+
+
 def drain_cycles(n_pending: jax.Array, ports: int) -> jax.Array:
     """Clock cycles for a p-port arbiter to drain ``n_pending`` requests."""
     return -(-n_pending // ports)  # ceil division; 0 pending -> 0 cycles

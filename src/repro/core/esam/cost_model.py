@@ -15,6 +15,9 @@ p=0 is the standard 6T single-port cell ("1RW"); p>=1 are "1RW+<p>R".
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
+
+import numpy as np
 
 # ----------------------------------------------------------------------------
 # Verbatim paper constants
@@ -184,6 +187,78 @@ ALL_CELLS = tuple(cell_spec(p) for p in range(5))
 def array_area_um2(read_ports: int, rows: int = 128, cols: int = 128) -> float:
     """Cell-array area (um^2) for one SRAM array."""
     return CELL_AREA_6T_UM2 * CELL_AREA_RATIO[read_ports] * rows * cols
+
+
+def tile_geometry(n_in: int, n_out: int) -> tuple[int, int]:
+    """(row groups, column groups) of 128x128 arrays for an n_in x n_out tile."""
+    return -(-n_in // MAX_ARRAY_ROWS), -(-n_out // MAX_ARRAY_COLS)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    """Per-request hardware cost of a batch of inferences (paper units).
+
+    Every field is a numpy array with leading batch axis B; the system-level
+    aggregates in ``network.system_stats`` are means over these, so a serving
+    plane can report the same paper-unit telemetry per request.
+    """
+
+    read_ports: int
+    cycles_per_tile: np.ndarray   # float64[B, T] — drain cycles + 1 fire cycle
+    cycles: np.ndarray            # float64[B] — sum over tiles (pipeline latency)
+    latency_ns: np.ndarray        # float64[B]
+    energy_pj: np.ndarray         # float64[B]
+
+
+def request_stats(
+    topology: Sequence[int],
+    spikes_per_group: Sequence[np.ndarray] | Sequence[Sequence[float]],
+    read_ports: int,
+) -> RequestStats:
+    """Per-sample hardware cost from measured arbiter loads.
+
+    Args:
+      topology: e.g. (768, 256, 256, 256, 10).
+      spikes_per_group: per tile, array[..., n_groups] of arbiter loads for a
+        batch of requests (the measured activity of each 128-row group).
+      read_ports: 0 (=1RW baseline) .. 4.
+
+    This is the single source of the energy/latency formulas:
+    ``network.system_stats`` evaluates an operating point by averaging these
+    per-request numbers, and ``serve.SpikeEngine`` attaches them to every
+    served request.
+    """
+    spec = cell_spec(read_ports)
+    p = spec.ports
+    n_tiles = len(topology) - 1
+
+    cycles_pt, energy = [], None
+    for t in range(n_tiles):
+        n_in, n_out = topology[t], topology[t + 1]
+        n_groups, n_colgroups = tile_geometry(n_in, n_out)
+        loads = np.asarray(spikes_per_group[t], dtype=np.float64)
+        loads = loads.reshape(-1, n_groups)              # [B, groups]
+        drain = np.ceil(loads / p)                       # cycles per group
+        tile_cycles = drain.max(axis=1) + 1.0            # +1: compare/fire cycle
+        cycles_pt.append(tile_cycles)
+
+        reads = loads.sum(axis=1) * n_colgroups          # row-read accesses
+        e = reads * spec.e_read_pj
+        e += tile_cycles * n_groups * E_ARBITER_PJ_PER_CYCLE_128
+        e += tile_cycles * n_out * E_NEURON_ACCUM_PJ
+        e += n_out * E_NEURON_FIRE_PJ
+        e += tile_cycles * n_groups * n_colgroups * E_TILE_CLOCKTREE_PJ_PER_CYCLE
+        energy = e if energy is None else energy + e
+
+    cycles_per_tile = np.stack(cycles_pt, axis=1)        # [B, T]
+    cycles = cycles_per_tile.sum(axis=1)
+    return RequestStats(
+        read_ports=read_ports,
+        cycles_per_tile=cycles_per_tile,
+        cycles=cycles,
+        latency_ns=cycles * spec.clock_ns,
+        energy_pj=energy,
+    )
 
 
 def column_update_cycles(read_ports: int, rows: int = 128) -> tuple[int, int]:

@@ -11,6 +11,7 @@ stages (both in cycles of the cell-dependent clock, Table 2).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Sequence
 
 import jax
@@ -133,13 +134,25 @@ class EsamNetwork:
         self, packed: jax.Array, *, interpret: bool | None = None
     ) -> jax.Array:
         """Fused cascade over pre-packed spikes uint32[B, ceil(n_in/32)]."""
+        logits, _ = self.forward_fused_packed_collect(packed, interpret=interpret)
+        return logits
+
+    def forward_fused_packed_collect(
+        self, packed: jax.Array, *, interpret: bool | None = None
+    ) -> tuple[jax.Array, list[jax.Array]]:
+        """``forward_fused_packed`` plus the tile-input bitplane at every tile
+        boundary — one pass, nothing unpacked.  The planes' group popcounts
+        (``packing.group_popcount``) are the measured arbiter loads, so the
+        serving plane's cost telemetry rides the packed datapath for free."""
         from repro.kernels.cim_matmul_packed import ops as packed_ops
 
-        p = self.forward_prefix_packed(packed, interpret=interpret)
+        p, planes = packed_prefix(
+            self.weight_bits, self.vth, packed, interpret=interpret, collect=True
+        )
         vmem = packed_ops.cim_matmul_packed(
             p, self.weight_bits[-1], interpret=interpret
         )
-        return vmem.astype(jnp.float32) + self.out_offset
+        return vmem.astype(jnp.float32) + self.out_offset, planes
 
     # ------------------------------------------------------------------ #
     # Cycle-accurate (event-driven) plane
@@ -165,7 +178,7 @@ class EsamNetwork:
     def forward_cycle_accurate_batch(
         self, spikes: jax.Array, ports: int, record_vmem_trace: bool = False
     ):
-        """Event-driven simulation of a whole batch (vmapped tiles).
+        """Event-driven simulation of a whole batch on the rank-schedule plane.
 
         spikes: bool[batch, n_in].  Returns (logits float[batch, n_cls],
         [batched TileTrace per tile]) — each trace field has a leading batch
@@ -181,6 +194,76 @@ class EsamNetwork:
         logits = traces[-1].vmem_final.astype(jnp.float32) + self.out_offset
         return logits, traces
 
+    def port_sweep(
+        self,
+        spikes: jax.Array,
+        read_ports: Sequence[int] = range(5),
+        record_vmem_trace: bool = False,
+    ) -> dict[int, tuple[jax.Array, list[tile_mod.TileTrace]]]:
+        """Batched cycle-accurate design-space sweep over SRAM cell options.
+
+        Runs the rank-schedule plane through every tile for each cell option
+        in ``read_ports`` (0 = the 1RW baseline reading through its RW port),
+        all inside ONE jitted call — the Fig 8 workload as a single device
+        program instead of a Python loop of simulations.
+
+        spikes: bool[batch, n_in].  Returns {read_ports: (logits, traces)};
+        logits are identical across entries (the schedule only moves *when*
+        contributions land), while traces carry the per-option cycle counts
+        the cost model consumes.
+        """
+        rp = tuple(int(p) for p in read_ports)
+        out = _port_sweep_jit(
+            self.weight_bits, self.vth, self.out_offset, spikes, rp,
+            record_vmem_trace,
+        )
+        return dict(zip(rp, out))
+
+    def measured_activity(
+        self,
+        spikes: jax.Array,
+        traces: Sequence[tile_mod.TileTrace] | None = None,
+    ) -> list[np.ndarray]:
+        """Measured arbiter loads of a batch, ready for ``system_stats``.
+
+        Returns per tile float64[batch, n_groups] — the *measured* activity
+        profile (vs the synthetic ``reference_activity``).  Pass the traces of
+        a ``port_sweep``/``forward_cycle_accurate_batch`` run to reuse the
+        spikes the simulator actually drained; otherwise the functional plane
+        recomputes the hidden layers.
+        """
+        per_layer = None
+        if traces is not None:
+            per_layer = [tr.out_spikes for tr in traces[:-1]]
+        counts = self.spike_counts(spikes, per_layer=per_layer)
+        return [np.asarray(c, np.float64) for c in counts]
+
+
+@partial(jax.jit, static_argnames=("read_ports", "record_vmem_trace"))
+def _port_sweep_jit(
+    weight_bits, vth, out_offset, spikes, read_ports: tuple[int, ...],
+    record_vmem_trace: bool,
+):
+    """One device program for the whole port sweep (unrolled over options —
+    each option has its own static schedule length ceil(128/p)).  Cell
+    options sharing an effective port count (0 and 1: the 1RW cell reads
+    through its single RW port) share one simulation."""
+    by_ports: dict[int, tuple] = {}
+    out = []
+    for p in read_ports:
+        ports = max(1, p)
+        if ports not in by_ports:
+            traces = []
+            s = spikes
+            for w, th in zip(weight_bits, vth):
+                tr = tile_mod.simulate_tile_batch(w, s, th, ports, record_vmem_trace)
+                traces.append(tr)
+                s = tr.out_spikes
+            logits = traces[-1].vmem_final.astype(jnp.float32) + out_offset
+            by_ports[ports] = (logits, traces)
+        out.append(by_ports[ports])
+    return out
+
 
 def packed_prefix(
     weight_bits: Sequence[jax.Array],
@@ -188,7 +271,8 @@ def packed_prefix(
     packed: jax.Array,
     *,
     interpret: bool | None = None,
-) -> jax.Array:
+    collect: bool = False,
+):
     """Cascade the hidden tiles (all but the last) on the packed plane.
 
     The single source of the packed prefix datapath: both inference
@@ -199,6 +283,11 @@ def packed_prefix(
 
     Hidden widths must be multiples of 32 (they are 128-aligned tile columns
     in every paper topology) so fired planes re-pack exactly.
+
+    ``collect=True`` returns (prefix, [tile-input bitplane per tile]) — the
+    packed wire at every tile boundary, including the last tile's input
+    (== the prefix), which is all the cost-model telemetry needs: arbiter
+    loads are popcounts of these planes.
     """
     from repro.kernels.cim_matmul_packed import ops as packed_ops
 
@@ -208,8 +297,12 @@ def packed_prefix(
             w.shape,
         )
     p = packed
+    planes = [p]
     for w, th in zip(weight_bits[:-1], vth[:-1]):
         p = packed_ops.esam_layer_packed(p, w, th, interpret=interpret)
+        planes.append(p)
+    if collect:
+        return p, planes
     return p
 
 
@@ -232,9 +325,8 @@ class SystemStats:
     area_ratio_vs_1rw: float
 
 
-def _tile_geometry(n_in: int, n_out: int) -> tuple[int, int]:
-    """(row groups, column groups) of 128x128 arrays for an n_in x n_out tile."""
-    return -(-n_in // ROW_GROUP), -(-n_out // ROW_GROUP)
+#: (row groups, column groups) of 128x128 arrays for an n_in x n_out tile.
+_tile_geometry = cm.tile_geometry
 
 
 def system_stats(
@@ -244,6 +336,12 @@ def system_stats(
 ) -> SystemStats:
     """Evaluate the full-system operating point for one cell option.
 
+    Batch means over ``cost_model.request_stats`` — the same per-request
+    accounting the serving plane reports — so an operating point can be
+    evaluated on the synthetic calibration profile (``reference_activity``)
+    or on *measured* batch activity (``EsamNetwork.measured_activity``)
+    interchangeably.
+
     Args:
       topology: e.g. (768, 256, 256, 256, 10).
       spikes_per_group: per tile, array[..., n_groups] of arbiter loads (may be
@@ -252,27 +350,9 @@ def system_stats(
       read_ports: 0 (=1RW baseline) .. 4.
     """
     spec = cm.cell_spec(read_ports)
-    p = spec.ports
-    n_tiles = len(topology) - 1
-
-    cycles, energy = [], 0.0
-    for t in range(n_tiles):
-        n_in, n_out = topology[t], topology[t + 1]
-        n_groups, n_colgroups = _tile_geometry(n_in, n_out)
-        loads = np.asarray(spikes_per_group[t], dtype=np.float64)
-        loads = loads.reshape(-1, n_groups)          # [batch, groups]
-        drain = np.ceil(loads / p)                   # cycles per group
-        tile_cycles = drain.max(axis=1).mean() + 1.0  # +1: compare/fire cycle
-        cycles.append(tile_cycles)
-
-        total_spikes = loads.sum(axis=1).mean()
-        reads = total_spikes * n_colgroups           # row-read accesses
-        energy += reads * spec.e_read_pj
-        energy += tile_cycles * n_groups * cm.E_ARBITER_PJ_PER_CYCLE_128
-        energy += tile_cycles * n_out * cm.E_NEURON_ACCUM_PJ
-        energy += n_out * cm.E_NEURON_FIRE_PJ
-        energy += tile_cycles * n_groups * n_colgroups * cm.E_TILE_CLOCKTREE_PJ_PER_CYCLE
-
+    rs = cm.request_stats(topology, spikes_per_group, read_ports)
+    cycles = rs.cycles_per_tile.mean(axis=0)         # [T] mean incl. fire cycle
+    energy = float(rs.energy_pj.mean())
     bottleneck = int(np.argmax(cycles))
     stage_ns = max(cycles) * spec.clock_ns
     throughput = 1e9 / stage_ns

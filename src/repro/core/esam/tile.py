@@ -11,6 +11,19 @@ cycle.  Each clock cycle:
 
 When every row group's request queue is empty (R_empty), neurons compare
 V_mem >= V_th and fire (Sec 3.4).
+
+Two planes compute that trace:
+
+* ``simulate_tile`` / ``simulate_tile_batch`` — the **rank-schedule plane**.
+  The fixed-priority cascade serves requests strictly in rank order, p per
+  cycle, so the grant cycle of every request is known in closed form
+  (``cycle = rank // p``, ``arbiter.grant_cycles``) and the whole drain
+  collapses into one matvec plus cycle-keyed segment sums — no sequential
+  loop.  ``kernels/arbiter.port_schedule`` fuses rank + schedule + segment
+  counts (Pallas on TPU, jnp ref elsewhere).
+* ``simulate_tile_scan`` / ``simulate_tile_scan_batch`` — the original
+  arbitration loop, one ``lax.scan`` step per clock cycle.  Kept as the
+  bit-identity oracle for the rank-schedule plane (tested field by field).
 """
 
 from __future__ import annotations
@@ -42,8 +55,116 @@ def max_drain_cycles(rows: int, ports: int, group: int = 128) -> int:
     return -(-group // ports)
 
 
-@partial(jax.jit, static_argnames=("ports", "record_vmem_trace"))
+# ---------------------------------------------------------------------- #
+# Rank-schedule plane (closed form, no sequential loop)
+# ---------------------------------------------------------------------- #
+def _schedule_trace(
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out]
+    in_spikes: jax.Array,     # bool[B, n_in]
+    vth: jax.Array,           # int32[n_out]
+    ports: int,
+    record_vmem_trace: bool,
+    use_kernel: bool | None,
+) -> TileTrace:
+    """Batched closed-form drain: every TileTrace field as a segment sum.
+
+    The grant cycle of request i is ``rank(i) // p`` (arbiter.grant_cycles),
+    so relative to the per-cycle scan:
+      vmem_final        -> the one matvec we already compute (functional plane)
+      grants_per_cycle  -> histogram of grant cycles over all row groups
+      cycles            -> number of non-empty schedule slots
+      vmem_trace        -> cumsum of weight-row segment sums keyed by cycle
+    All arithmetic is exact int32, so the result is bit-identical to
+    ``simulate_tile_scan`` (property-tested).
+    """
+    from repro.kernels.arbiter import ops as arb_ops
+
+    n_in, n_out = weight_bits.shape
+    batch = in_spikes.shape[0]
+    w_signed = nrn.decode_bitlines(weight_bits)            # {-1,+1} int32
+    groups = arb.split_row_groups(in_spikes)               # [B, G, 128]
+    n_groups = groups.shape[1]
+    max_cycles = max_drain_cycles(n_in, ports)
+
+    cycle_of, counts = arb_ops.port_schedule(
+        groups.reshape(batch * n_groups, groups.shape[-1]),
+        ports=ports,
+        use_kernel=use_kernel,
+    )
+    counts = counts.reshape(batch, n_groups, max_cycles)
+    grants_seq = counts.sum(axis=1).astype(jnp.int32)      # [B, max_cycles]
+    cycles = jnp.sum(grants_seq > 0, axis=-1).astype(jnp.int32)
+
+    vmem = jnp.einsum("bi,io->bo", in_spikes.astype(jnp.int32), w_signed)
+    vmem = vmem.astype(jnp.int32)
+    out_spikes = vmem >= vth
+
+    if record_vmem_trace:
+        # Segment-sum the weight rows by grant cycle, then prefix-sum over
+        # cycles: trace[c] == V_mem after cycle c, exactly as the scan logs it
+        # (the sentinel cycle of non-request lanes falls outside the one-hot).
+        cyc = cycle_of.reshape(batch, n_in)
+        onehot = (cyc[:, :, None] == jnp.arange(max_cycles)[None, None, :])
+        contrib = jnp.einsum("bic,io->bco", onehot.astype(jnp.int32), w_signed)
+        vmem_trace = jnp.cumsum(contrib, axis=1).astype(jnp.int32)
+    else:
+        vmem_trace = jnp.zeros((batch, 0, n_out), jnp.int32)
+
+    return TileTrace(
+        out_spikes=out_spikes,
+        vmem_final=vmem,
+        cycles=cycles,
+        grants_per_cycle=grants_seq,
+        vmem_trace=vmem_trace,
+    )
+
+
+@partial(jax.jit, static_argnames=("ports", "record_vmem_trace", "use_kernel"))
 def simulate_tile(
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out] stored bits
+    in_spikes: jax.Array,     # bool[n_in]
+    vth: jax.Array,           # int32[n_out]
+    ports: int,
+    record_vmem_trace: bool = False,
+    use_kernel: bool | None = None,
+) -> TileTrace:
+    """Run one tile to R_empty on the rank-schedule plane (closed form).
+
+    Bit-identical to ``simulate_tile_scan`` in every trace field;
+    ``record_vmem_trace`` opts in to the full per-cycle V_mem history.
+    """
+    trace = _schedule_trace(
+        weight_bits, in_spikes[None], vth, ports, record_vmem_trace, use_kernel
+    )
+    return jax.tree_util.tree_map(lambda x: x[0], trace)
+
+
+@partial(jax.jit, static_argnames=("ports", "record_vmem_trace", "use_kernel"))
+def simulate_tile_batch(
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out]
+    in_spikes: jax.Array,     # bool[batch, n_in]
+    vth: jax.Array,           # int32[n_out]
+    ports: int,
+    record_vmem_trace: bool = False,
+    use_kernel: bool | None = None,
+) -> TileTrace:
+    """Rank-schedule plane over a batch of samples.
+
+    Unlike the scan plane this is natively batched — one [B, n_in] matvec and
+    one [B*G, 128] schedule call — rather than a vmapped per-sample loop.
+    Every TileTrace field gains a leading batch axis; per-sample semantics are
+    identical to the single-sample simulator (tested).
+    """
+    return _schedule_trace(
+        weight_bits, in_spikes, vth, ports, record_vmem_trace, use_kernel
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Scan plane (per-cycle arbitration loop) — the bit-identity oracle
+# ---------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("ports", "record_vmem_trace"))
+def simulate_tile_scan(
     weight_bits: jax.Array,   # {0,1}[n_in, n_out] stored bits
     in_spikes: jax.Array,     # bool[n_in]
     vth: jax.Array,           # int32[n_out]
@@ -52,9 +173,9 @@ def simulate_tile(
 ) -> TileTrace:
     """Run one tile to R_empty, one arbiter round per scan step.
 
-    ``record_vmem_trace`` opts in to the full per-cycle V_mem history; by
-    default the scan carries O(n_out) state instead of O(max_cycles * n_out)
-    outputs, which is what makes the vmapped batch plane affordable.
+    This is the literal cycle-by-cycle rendering of the hardware drain; the
+    rank-schedule plane above must match it bit for bit (tested), which is
+    why it stays in the tree as the oracle and the bench baseline.
     """
     n_in, n_out = weight_bits.shape
     w_signed = nrn.decode_bitlines(weight_bits)            # {-1,+1} int32
@@ -95,20 +216,16 @@ def simulate_tile(
 
 
 @partial(jax.jit, static_argnames=("ports", "record_vmem_trace"))
-def simulate_tile_batch(
+def simulate_tile_scan_batch(
     weight_bits: jax.Array,   # {0,1}[n_in, n_out]
     in_spikes: jax.Array,     # bool[batch, n_in]
     vth: jax.Array,           # int32[n_out]
     ports: int,
     record_vmem_trace: bool = False,
 ) -> TileTrace:
-    """Cycle-accurate plane over a batch of samples (vmapped ``simulate_tile``).
-
-    Every TileTrace field gains a leading batch axis; per-sample semantics are
-    identical to the single-sample simulator (tested).
-    """
+    """Scan plane over a batch of samples (vmapped ``simulate_tile_scan``)."""
     return jax.vmap(
-        lambda s: simulate_tile(weight_bits, s, vth, ports, record_vmem_trace)
+        lambda s: simulate_tile_scan(weight_bits, s, vth, ports, record_vmem_trace)
     )(in_spikes)
 
 

@@ -56,6 +56,22 @@ def pack_spikes(spikes: jax.Array) -> jax.Array:
     return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
 
 
+def group_popcount(packed: jax.Array, group: int = 128) -> jax.Array:
+    """Spike count per ``group``-bit row group, straight off the wire format.
+
+    packed: uint32[..., W] bitplanes of a width-(W*32) spike plane whose
+    logical width is a multiple of ``group`` (tail padding past it is zero,
+    so counts stay exact).  Returns int32[..., W*32/group] — exactly the
+    arbiter loads ``EsamNetwork.spike_counts`` measures, without unpacking.
+    """
+    assert group % LANE_BITS == 0, group
+    words_per_group = group // LANE_BITS
+    pc = jax.lax.population_count(packed).astype(jnp.int32)
+    w = pc.shape[-1]
+    assert w % words_per_group == 0, (w, group)
+    return pc.reshape(pc.shape[:-1] + (w // words_per_group, words_per_group)).sum(-1)
+
+
 def unpack_spikes(packed: jax.Array, n: int, dtype=jnp.int8) -> jax.Array:
     """uint32[..., W] -> {0,1}[..., n] in ``dtype``."""
     w = packed.shape[-1]

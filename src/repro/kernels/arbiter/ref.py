@@ -6,7 +6,39 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.esam.arbiter import grant_cycles
 from repro.core.esam.arbiter import priority_grants_oracle  # noqa: F401  (re-export)
+
+
+def port_schedule_ref(requests: jax.Array, ports: int):
+    """Closed-form drain schedule for a batch of row groups (jnp oracle).
+
+    Replaces the cycle-by-cycle arbitration loop: a request with in-group
+    rank r is granted at cycle ``r // p`` (see core ``arbiter.grant_cycles``),
+    so the full drain reduces to one rank computation plus a cycle-keyed
+    segment count.
+
+    Args:
+      requests: {0,1}[N, W] — one request vector per 128-row group.
+      ports: p.
+    Returns:
+      cycle_of int32[N, W] — grant cycle per lane (sentinel ``ceil(W/p)``
+        on non-request lanes).
+      counts int32[N, C] — grants issued per cycle per group,
+        C = ceil(W / p).  ``counts.sum(-1)`` is the group popcount and
+        ``(counts > 0).sum(-1)`` its drain-cycle count.
+    """
+    w = requests.shape[-1]
+    n_cycles = -(-w // ports)
+    cycle_of = grant_cycles(requests, ports)
+    # Requests drain in rank order, p per cycle, so cycle c serves ranks
+    # [c*p, (c+1)*p): its grant count is clip(popcount - c*p, 0, p) — the
+    # segment histogram in closed form, no per-lane scatter.
+    pop = requests.astype(jnp.int32).sum(axis=-1)
+    counts = jnp.clip(
+        pop[:, None] - jnp.arange(n_cycles)[None, :] * ports, 0, ports
+    ).astype(jnp.int32)
+    return cycle_of, counts
 
 
 def arbiter_ref(requests: jax.Array, ports: int):

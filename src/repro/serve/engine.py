@@ -110,6 +110,10 @@ class SpikeRequest:
     # filled by the engine:
     logits: Optional[np.ndarray] = None    # float32[n_classes]
     label: Optional[int] = None            # argmax readout
+    # filled when the engine runs with telemetry (paper-unit hardware cost):
+    cycles: Optional[int] = None           # CIM clock cycles, summed over tiles
+    latency_ns: Optional[float] = None     # cycles * cell clock period
+    energy_pj: Optional[float] = None      # per-inference energy (pJ/inf)
 
 
 class SpikeEngine:
@@ -118,19 +122,43 @@ class SpikeEngine:
     Requests are packed on the host (numpy — no device round-trip) and padded
     to ``batch_size`` slots; silent (all-zero) pad rows are exact because a
     zero spike never contributes to the CIM MAC.
+
+    With ``telemetry=True`` every served request additionally carries the
+    hardware cost the simulated macro would pay for it — cycles, latency and
+    pJ/inf from ``cost_model.request_stats`` on the request's *measured*
+    arbiter loads (the same accounting ``network.system_stats`` averages for
+    the Fig 8 operating points) — and ``stats()`` reports the running
+    aggregate in paper units.
     """
 
     def __init__(self, net, *, batch_size: int = 128,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 telemetry: bool = False, read_ports: int = 4):
         from repro.core import packing
 
         self.net = net
         self.batch_size = batch_size
         self.n_in = net.topology[0]
+        self.telemetry = telemetry
+        self.read_ports = read_ports
         self._packing = packing
         self._fwd = jax.jit(
             lambda packed: net.forward_fused_packed(packed, interpret=interpret)
         )
+
+        # Telemetry variant: same single packed pass, but it also returns the
+        # per-tile arbiter loads (group popcounts of the inter-tile bitplanes)
+        # — no second forward, no unpacked spike tensor.
+        def _fwd_collect(packed):
+            logits, planes = net.forward_fused_packed_collect(
+                packed, interpret=interpret)
+            return logits, tuple(packing.group_popcount(p) for p in planes)
+
+        self._fwd_telemetry = jax.jit(_fwd_collect)
+        self._served = 0
+        self._cycles_total = 0.0
+        self._latency_ns_total = 0.0
+        self._energy_pj_total = 0.0
 
     def serve(self, requests: list[SpikeRequest]) -> list[SpikeRequest]:
         queue = list(requests)
@@ -140,13 +168,53 @@ class SpikeEngine:
             self._serve_batch(batch_reqs)
         return requests
 
+    def stats(self) -> dict:
+        """Aggregate hardware-cost telemetry over every request served with
+        ``telemetry=True`` (all counters stay zero when telemetry is off)."""
+        from repro.core.esam import cost_model as cm
+
+        n = max(1, self._served)
+        spec = cm.cell_spec(self.read_ports)
+        mean_latency_ns = self._latency_ns_total / n
+        return {
+            "requests": self._served,
+            "telemetry": self.telemetry,
+            "cell": spec.name,
+            "read_ports": self.read_ports,
+            "cycles_mean": self._cycles_total / n,
+            "latency_ns_mean": mean_latency_ns,
+            "energy_pj_per_inf": self._energy_pj_total / n,
+            # un-pipelined device-side rate implied by the mean latency
+            "throughput_inf_s": 1e9 / mean_latency_ns if mean_latency_ns else 0.0,
+        }
+
     def _serve_batch(self, reqs: list[SpikeRequest]):
         spikes = np.zeros((self.batch_size, self.n_in), np.uint8)
         for i, r in enumerate(reqs):
             assert r.spikes.shape == (self.n_in,), (r.spikes.shape, self.n_in)
             spikes[i] = np.asarray(r.spikes) != 0
         packed = jnp.asarray(self._packing.pack_spikes_np(spikes))
-        logits = np.asarray(self._fwd(packed))
+        if self.telemetry:
+            logits_j, counts = self._fwd_telemetry(packed)
+            logits = np.asarray(logits_j)
+        else:
+            logits = np.asarray(self._fwd(packed))
         for i, r in enumerate(reqs):
             r.logits = logits[i]
             r.label = int(logits[i].argmax())
+        if self.telemetry:
+            self._attach_telemetry(reqs, counts)
+
+    def _attach_telemetry(self, reqs: list[SpikeRequest], counts):
+        from repro.core.esam import cost_model as cm
+
+        loads = [np.asarray(c, np.float64)[: len(reqs)] for c in counts]
+        rs = cm.request_stats(self.net.topology, loads, self.read_ports)
+        for i, r in enumerate(reqs):
+            r.cycles = int(rs.cycles[i])
+            r.latency_ns = float(rs.latency_ns[i])
+            r.energy_pj = float(rs.energy_pj[i])
+        self._served += len(reqs)
+        self._cycles_total += float(rs.cycles.sum())
+        self._latency_ns_total += float(rs.latency_ns.sum())
+        self._energy_pj_total += float(rs.energy_pj.sum())

@@ -33,6 +33,16 @@ def test_pack_unpack_round_trip(n, batch, seed):
     )
 
 
+@given(n=st.sampled_from([128, 256, 768]), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_group_popcount_matches_unpacked_counts(n, seed):
+    """Arbiter loads straight off the wire == counts on the unpacked plane."""
+    s = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.4, (4, n))
+    counts = packing.group_popcount(packing.pack_spikes(s))
+    want = np.asarray(s, np.int32).reshape(4, n // 128, 128).sum(-1)
+    np.testing.assert_array_equal(np.asarray(counts), want)
+
+
 @given(n=st.integers(1, 300), seed=st.integers(0, 2**16))
 @settings(max_examples=40, deadline=None)
 def test_pack_of_unpack_is_identity_on_words(n, seed):

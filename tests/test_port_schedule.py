@@ -1,0 +1,197 @@
+"""Rank-schedule cycle-accurate plane vs the retained scan oracle.
+
+The tentpole claim: ``simulate_tile{,_batch}`` (closed-form rank schedule,
+no sequential loop) is bit-identical to ``simulate_tile_scan{,_batch}``
+(the per-cycle arbitration loop) in EVERY TileTrace field — logits/V_mem,
+cycles, grants-per-cycle, and opt-in V_mem traces — across ports 1..4,
+non-128-multiple output widths, and degenerate request vectors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.esam import cost_model as cm
+from repro.core.esam import tile as tile_mod
+from repro.core.esam.network import EsamNetwork, system_stats
+
+
+def _rand_tile(key, n_in, n_out):
+    kw, kt = jax.random.split(key)
+    bits = jax.random.bernoulli(kw, 0.5, (n_in, n_out)).astype(jnp.int8)
+    vth = jax.random.randint(kt, (n_out,), -10, 10, jnp.int32)
+    return bits, vth
+
+
+def _assert_traces_equal(a: tile_mod.TileTrace, b: tile_mod.TileTrace):
+    for fa, fb, name in zip(a, b, tile_mod.TileTrace._fields):
+        assert fa.shape == fb.shape and fa.dtype == fb.dtype, (
+            name, fa.shape, fb.shape, fa.dtype, fb.dtype)
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb),
+                                      err_msg=name)
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_schedule_plane_bit_identical_to_scan_oracle(data):
+    """Property sweep: ports 1..4, 128-multiple inputs, non-128-multiple
+    outputs, random densities incl. the degenerate ends, both trace modes."""
+    ports = data.draw(st.integers(1, 4))
+    n_in = data.draw(st.sampled_from([128, 256, 384]))
+    n_out = data.draw(st.sampled_from([10, 33, 64, 128]))  # incl. non-128-multiples
+    density = data.draw(st.sampled_from([0.0, 0.1, 0.5, 0.9, 1.0]))
+    record = data.draw(st.booleans())
+    seed = data.draw(st.integers(0, 2**16))
+
+    key = jax.random.PRNGKey(seed)
+    bits, vth = _rand_tile(key, n_in, n_out)
+    spikes = jax.random.bernoulli(jax.random.fold_in(key, 1), density, (n_in,))
+    sched = tile_mod.simulate_tile(bits, spikes, vth, ports, record)
+    scan = tile_mod.simulate_tile_scan(bits, spikes, vth, ports, record)
+    _assert_traces_equal(sched, scan)
+
+
+@pytest.mark.parametrize("ports", [1, 2, 3, 4])
+@pytest.mark.parametrize("fill", [0, 1])
+def test_all_zero_and_all_ones_requests(ports, fill):
+    """The degenerate request vectors, with the full V_mem trace recorded."""
+    n_in, n_out = 256, 10
+    key = jax.random.PRNGKey(ports * 10 + fill)
+    bits, vth = _rand_tile(key, n_in, n_out)
+    spikes = jnp.full((n_in,), bool(fill))
+    sched = tile_mod.simulate_tile(bits, spikes, vth, ports,
+                                   record_vmem_trace=True)
+    scan = tile_mod.simulate_tile_scan(bits, spikes, vth, ports,
+                                       record_vmem_trace=True)
+    _assert_traces_equal(sched, scan)
+    want_cycles = 0 if fill == 0 else -(-128 // ports)
+    assert int(sched.cycles) == want_cycles
+
+
+@pytest.mark.parametrize("ports", [1, 3, 4])
+def test_batched_schedule_plane_matches_scan_batch(ports):
+    key = jax.random.PRNGKey(ports)
+    bits, vth = _rand_tile(key, 384, 33)
+    spikes = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.4, (16, 384))
+    sched = tile_mod.simulate_tile_batch(bits, spikes, vth, ports,
+                                         record_vmem_trace=True)
+    scan = tile_mod.simulate_tile_scan_batch(bits, spikes, vth, ports,
+                                             record_vmem_trace=True)
+    _assert_traces_equal(sched, scan)
+
+
+# ----------------------------------------------------------------------- #
+# port_sweep API
+# ----------------------------------------------------------------------- #
+def _rand_net(key, topo):
+    bits, vth = [], []
+    for i in range(len(topo) - 1):
+        b, t = _rand_tile(jax.random.fold_in(key, i), topo[i], topo[i + 1])
+        bits.append(b)
+        vth.append(t)
+    return EsamNetwork(weight_bits=bits, vth=vth,
+                       out_offset=jnp.zeros((topo[-1],), jnp.float32))
+
+
+def test_port_sweep_covers_all_cells_in_one_call():
+    key = jax.random.PRNGKey(0)
+    net = _rand_net(key, (256, 128, 10))
+    spikes = jax.random.bernoulli(jax.random.fold_in(key, 9), 0.4, (8, 256))
+    sweep = net.port_sweep(spikes, read_ports=range(5))
+    assert sorted(sweep) == [0, 1, 2, 3, 4]
+    want = np.asarray(net.forward(spikes))
+    for p, (logits, traces) in sweep.items():
+        # logits are schedule-invariant; cycle counts are not
+        np.testing.assert_array_equal(np.asarray(logits), want)
+        assert len(traces) == 2 and traces[0].cycles.shape == (8,)
+        ports = max(1, p)
+        loads = np.asarray(spikes, np.int32).reshape(8, 2, 128).sum(-1)
+        np.testing.assert_array_equal(
+            np.asarray(traces[0].cycles),
+            np.ceil(loads / ports).max(axis=1).astype(np.int32))
+
+
+def test_port_sweep_traces_match_scan_oracle():
+    key = jax.random.PRNGKey(4)
+    net = _rand_net(key, (128, 128, 10))
+    spikes = jax.random.bernoulli(jax.random.fold_in(key, 5), 0.3, (4, 128))
+    sweep = net.port_sweep(spikes, read_ports=(2,))
+    _, traces = sweep[2]
+    s = spikes
+    for w, th, tr in zip(net.weight_bits, net.vth, traces):
+        _assert_traces_equal(tr, tile_mod.simulate_tile_scan_batch(w, s, th, 2))
+        s = tr.out_spikes
+
+
+# ----------------------------------------------------------------------- #
+# measured activity -> cost model, per-request accounting
+# ----------------------------------------------------------------------- #
+def test_measured_activity_feeds_system_stats():
+    key = jax.random.PRNGKey(7)
+    net = _rand_net(key, (256, 128, 10))
+    spikes = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (12, 256))
+    sweep = net.port_sweep(spikes, read_ports=(4,))
+    act = net.measured_activity(spikes, traces=sweep[4][1])
+    # trace-fed loads == functional-plane loads (same datapath)
+    act_fn = net.measured_activity(spikes)
+    for a, b in zip(act, act_fn):
+        np.testing.assert_array_equal(a, b)
+    s4 = system_stats(net.topology, act, 4)
+    rs = cm.request_stats(net.topology, act, 4)
+    assert rs.energy_pj.shape == (12,)
+    # system stats are the batch means of the per-request accounting
+    assert s4.energy_pj_per_inf == pytest.approx(rs.energy_pj.mean())
+    assert s4.latency_ns == pytest.approx(rs.cycles_per_tile.mean(0).sum()
+                                          * cm.cell_spec(4).clock_ns)
+
+
+def test_request_stats_matches_system_stats_on_reference_profile():
+    from repro.core.esam.network import reference_activity
+
+    act = reference_activity()
+    for p in (0, 4):
+        rs = cm.request_stats(cm.PAPER_TOPOLOGY, act, p)
+        st_ = system_stats(cm.PAPER_TOPOLOGY, act, p)
+        assert rs.energy_pj.mean() == pytest.approx(st_.energy_pj_per_inf)
+        assert rs.latency_ns.mean() == pytest.approx(st_.latency_ns)
+        # drain cycles per tile: ceil(load/p) + 1 fire cycle
+        spec = cm.cell_spec(p)
+        want = [np.ceil(cm.REF_SPIKES_PER_GROUP[t] / spec.ports) + 1
+                for t in range(4)]
+        np.testing.assert_allclose(rs.cycles_per_tile[0], want)
+
+
+def test_spike_engine_telemetry_matches_request_stats():
+    from repro.serve.engine import SpikeEngine, SpikeRequest
+
+    key = jax.random.PRNGKey(11)
+    net = _rand_net(key, (768, 256, 10))
+    s = np.asarray(jax.random.bernoulli(jax.random.fold_in(key, 2), 0.3, (5, 768)))
+    eng = SpikeEngine(net, batch_size=2, interpret=True,
+                      telemetry=True, read_ports=4)
+    reqs = eng.serve([SpikeRequest(spikes=s[i]) for i in range(5)])
+
+    act = net.measured_activity(jnp.asarray(s).astype(bool))
+    rs = cm.request_stats(net.topology, act, 4)
+    for i, r in enumerate(reqs):
+        assert r.cycles == int(rs.cycles[i])
+        assert r.latency_ns == pytest.approx(float(rs.latency_ns[i]))
+        assert r.energy_pj == pytest.approx(float(rs.energy_pj[i]))
+    stats = eng.stats()
+    assert stats["requests"] == 5 and stats["cell"] == "1RW+4R"
+    assert stats["energy_pj_per_inf"] == pytest.approx(rs.energy_pj.mean())
+
+
+def test_spike_engine_telemetry_zero_spike_request():
+    """A silent request still pays the fire cycle on every tile, nothing more."""
+    from repro.serve.engine import SpikeEngine, SpikeRequest
+
+    key = jax.random.PRNGKey(13)
+    net = _rand_net(key, (768, 256, 10))
+    # vth > 0 so a silent input stays silent through the hidden tile
+    net.vth[0] = jnp.ones((256,), jnp.int32)
+    eng = SpikeEngine(net, batch_size=2, interpret=True, telemetry=True)
+    r = eng.serve([SpikeRequest(spikes=np.zeros(768, np.uint8))])[0]
+    assert r.cycles == len(net.weight_bits)  # one compare/fire cycle per tile
