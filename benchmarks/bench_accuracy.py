@@ -4,11 +4,20 @@ the synthetic digit set (no MNIST offline — DESIGN.md §8)."""
 
 from __future__ import annotations
 
+import os
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+try:
+    from benchmarks.common import emit, time_call
+except ModuleNotFoundError:  # direct `python benchmarks/bench_accuracy.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+    from benchmarks.common import emit, time_call
 from repro.core.esam import bnn, conversion, cost_model as cm
 from repro.data import digits
 
@@ -26,7 +35,7 @@ def run():
         repeats=1, warmup=0)
     net = conversion.bnn_to_snn(params)
     bnn_pred = bnn.forward(params, x_test).argmax(-1)
-    snn_pred = net.forward(x_test.astype(bool)).argmax(-1)
+    snn_pred = net.plan(mode="functional")(x_test.astype(bool)).logits.argmax(-1)
     bnn_acc = float((bnn_pred == y_test).mean())
     snn_acc = float((snn_pred == y_test).mean())
     mismatch = int((bnn_pred != snn_pred).sum())

@@ -1,0 +1,104 @@
+"""Sharded-plan serving throughput: the ESAM system-level claim as a bench.
+
+Drives ``SpikeEngine`` (admission queue -> power-of-two buckets -> one
+compiled, optionally ``shard_map``-ped packed plan) with synthetic digit
+traffic and records, per configuration:
+
+  * wall-clock serving rate (requests/s) on this host,
+  * the modeled hardware operating point in paper units — pipelined MInf/s
+    and pJ/Inf from the device-resident telemetry accumulators,
+
+into ``BENCH_serving.json`` (override with env BENCH_SERVING_OUT).  Run
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise
+the data-parallel plan on CPU.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import Recorder
+except ModuleNotFoundError:  # direct `python benchmarks/bench_serving.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+    from benchmarks.common import Recorder
+from repro.core.esam import cost_model as cm
+from repro.core.esam.network import EsamNetwork
+from repro.data import digits
+from repro.distributed import sharding as shd
+from repro.serve.engine import SpikeEngine, SpikeRequest
+
+N_REQUESTS = int(os.environ.get("BENCH_SERVING_REQUESTS", "256"))
+MAX_BATCH = 128
+
+
+def _paper_net(seed: int = 0) -> EsamNetwork:
+    key = jax.random.PRNGKey(seed)
+    topo = cm.PAPER_TOPOLOGY
+    bits = [
+        jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i + 1])).astype(jnp.int8)
+        for i in range(len(topo) - 1)
+    ]
+    vth = [jnp.zeros((n,), jnp.int32) for n in topo[1:]]
+    return EsamNetwork(weight_bits=bits, vth=vth,
+                       out_offset=jnp.zeros((topo[-1],), jnp.float32))
+
+
+def _serve_once(rec: Recorder, tag: str, net, reqs_np, rules) -> None:
+    # warm on a throwaway engine serving the same workload, so every bucket
+    # the timed run dispatches is already compiled (plans are cached per
+    # network) and the timed engine's stats() see only the timed requests —
+    # time_call's warmup=1 convention, engine-shaped
+    engine_kw = dict(max_batch=MAX_BATCH, telemetry=True, read_ports=4,
+                     rules=rules)
+    SpikeEngine(net, **engine_kw).serve(
+        [SpikeRequest(spikes=r) for r in reqs_np])
+
+    eng = SpikeEngine(net, **engine_kw)
+    reqs = [SpikeRequest(spikes=r) for r in reqs_np]
+    t0 = time.perf_counter()
+    eng.serve(reqs)
+    wall_s = time.perf_counter() - t0
+    st = eng.stats()
+    req_s = len(reqs) / wall_s
+    rec.emit(
+        f"serving_{tag}", wall_s * 1e6 / len(reqs),
+        f"requests={len(reqs)};requests_per_s={req_s:,.0f};"
+        f"data_parallel={st['data_parallel']};buckets={eng._buckets};"
+        f"model_minf_s={st['throughput_pipelined_inf_s']/1e6:.2f}"
+        f"(paper {cm.PAPER_THROUGHPUT_INF_S/1e6:.0f});"
+        f"model_energy_pj_inf={st['energy_pj_per_inf']:.0f}"
+        f"(paper {cm.PAPER_ENERGY_PJ_PER_INF:.0f});"
+        f"cell={st['cell']}",
+    )
+
+
+def run():
+    rec = Recorder()
+    net = _paper_net()
+    x, _ = digits.make_spike_dataset(N_REQUESTS, seed=7)
+
+    _serve_once(rec, "single_device", net, x, rules=None)
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        rules = shd.make_esam_rules(shd.esam_data_mesh())
+        _serve_once(rec, f"sharded_dp{n_dev}", net, x, rules=rules)
+    else:
+        rec.emit("serving_sharded_skipped", 0.0,
+                 "devices=1(set XLA_FLAGS=--xla_force_host_platform_"
+                 "device_count=8 for the data-parallel lane)")
+
+    rec.write_json(os.environ.get("BENCH_SERVING_OUT", "BENCH_serving.json"))
+
+
+if __name__ == "__main__":
+    run()

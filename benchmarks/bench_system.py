@@ -113,7 +113,8 @@ def _measured_network_sweep(rec: Recorder):
 
     us, sweep = time_call(net.port_sweep, spikes, range(5))
     logits4 = np.asarray(sweep[4][0])
-    np.testing.assert_array_equal(logits4, np.asarray(net.forward(spikes)))
+    np.testing.assert_array_equal(
+        logits4, np.asarray(net.plan(mode="functional")(spikes).logits))
 
     activity = net.measured_activity(spikes, traces=sweep[4][1])
     speedup, eff = _emit_sweep(rec, "measured", activity)

@@ -36,7 +36,7 @@ def main():
           f"4R transposed read {c4.read_ns}ns ({c4.speedup_read_vs_1rw:.1f}x) "
           f"write {c4.write_ns}ns ({c4.speedup_write_vs_1rw:.1f}x)")
 
-    acc0 = float((jnp.argmax(net.forward(x), -1) == y).mean())
+    acc0 = float((jnp.argmax(net.plan(mode="functional")(x).logits, -1) == y).mean())
     res = online_train.train_online(
         net, x, y, epochs=6, key=jax.random.PRNGKey(10), p_pot=0.2, p_dep=0.1)
 

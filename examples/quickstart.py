@@ -6,6 +6,11 @@
 4. Report the system-level operating point for every SRAM cell option and
    check the paper's headline claims (3.1x speed / 2.2x energy, Table 3 row).
 
+Inference runs through *execution plans* (``EsamNetwork.plan``): each plan
+is compiled once for a (mode, collect, telemetry) tuple and reused for every
+batch — the functional plan below returns logits, hidden spike planes, and
+the cost model's arbiter loads in ONE pass.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -28,30 +33,29 @@ def main():
 
     print("== 2. lossless BNN -> binary-SNN conversion ==")
     net = conversion.bnn_to_snn(params)
-    logits, per_layer = net.forward(xj.astype(bool), collect=True)
-    snn_acc = float((logits.argmax(-1) == yj).mean())
+    # one compiled functional plan: logits + arbiter loads in a single pass
+    fn_plan = net.plan(mode="functional", telemetry=True)
+    res = fn_plan(xj.astype(bool))
+    snn_acc = float((res.logits.argmax(-1) == yj).mean())
     print(f"   SNN accuracy: {snn_acc*100:.1f}%  topology={net.topology}")
 
-    print("== 2b. packed fused plane (uint32 bitplanes between tiles) ==")
-    logits_fused = net.forward_fused(xj[:256].astype(bool))
-    same = bool(jnp.array_equal(logits_fused, logits[:256]))
-    print(f"   forward_fused == forward on 256 samples: {same}")
+    print("== 2b. packed fused plan (uint32 bitplanes between tiles) ==")
+    packed_plan = net.plan()          # mode="packed" is the default
+    logits_fused = packed_plan(xj[:256].astype(bool)).logits
+    same = bool(jnp.array_equal(logits_fused, res.logits[:256]))
+    print(f"   packed plan == functional plan on 256 samples: {same}")
 
-    print("== 3. event-driven (cycle-accurate) inference, 4 ports ==")
-    sample = jnp.asarray(x[0]).astype(bool)
-    logits, traces = net.forward_cycle_accurate(sample, ports=4)
-    cycles = [int(t.cycles) for t in traces]
-    print(f"   predicted class: {int(logits.argmax())} (label {int(y[0])})")
+    print("== 3. event-driven (cycle-accurate) plan, 4 ports ==")
+    cycle_plan = net.plan(mode="cycle", read_ports=4)
+    sample = cycle_plan(jnp.asarray(x[0]).astype(bool))
+    cycles = [int(t.cycles) for t in sample.traces]
+    print(f"   predicted class: {int(sample.logits.argmax())} (label {int(y[0])})")
     print(f"   cycles per tile until R_empty: {cycles}")
 
     print("== 4. system-level operating points (Fig 8 / Table 3) ==")
-    # reuse the layer spikes collected in step 2 — no tile matmul is re-run
-    counts = [
-        np.asarray(c, np.float64)
-        for c in net.spike_counts(
-            xj[:256].astype(bool), per_layer=[s[:256] for s in per_layer]
-        )
-    ]
+    # the telemetry loads collected in step 2 ARE the measured activity —
+    # no tile matmul is re-run
+    counts = [np.asarray(c[:256], np.float64) for c in res.loads]
     for ports in range(5):
         s = system_stats(cm.PAPER_TOPOLOGY, counts, ports)
         print(f"   {s.cell:7s}: {s.throughput_inf_s/1e6:6.2f} MInf/s  "

@@ -12,8 +12,9 @@ Planes:
     throughput/energy/power claims from the calibrated 3nm cost model.
 """
 
-from repro.core.esam import arbiter, bnn, conversion, cost_model, learning, neuron, network, tile
+from repro.core.esam import arbiter, bnn, conversion, cost_model, learning, neuron, network, plan, tile
 from repro.core.esam.network import EsamNetwork, SystemStats, reference_activity, system_stats
+from repro.core.esam.plan import EsamPlan, PlanResult, PlanSpec
 
 __all__ = [
     "arbiter",
@@ -23,8 +24,12 @@ __all__ = [
     "learning",
     "neuron",
     "network",
+    "plan",
     "tile",
     "EsamNetwork",
+    "EsamPlan",
+    "PlanResult",
+    "PlanSpec",
     "SystemStats",
     "system_stats",
     "reference_activity",

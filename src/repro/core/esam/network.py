@@ -11,7 +11,7 @@ stages (both in cycles of the cell-dependent clock, Table 2).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Sequence
 
 import jax
@@ -21,8 +21,26 @@ import numpy as np
 from repro.core.esam import arbiter as arb
 from repro.core.esam import cost_model as cm
 from repro.core.esam import tile as tile_mod
+from repro.core.esam import plan as plan_mod
+from repro.core.esam.plan import EsamPlan, PlanSpec
 
 ROW_GROUP = 128
+
+#: The legacy ``forward*`` entry points below are deprecated wrappers over
+#: ``EsamNetwork.plan`` — each warns once per process.
+_DEPRECATION_WARNED: set[str] = set()
+
+
+def _warn_deprecated(name: str, instead: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"EsamNetwork.{name} is deprecated; build an execution plan once via "
+        f"EsamNetwork.plan({instead}) and call it per batch.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass
@@ -33,15 +51,58 @@ class EsamNetwork:
     vth: per layer, int32[n_out] per-neuron thresholds (Fig 5's t-bit register).
     out_offset: float[n_classes] — per-neuron readout offset folded from the
       BNN's final-layer bias during conversion (argmax-preserving).
+
+    All inference entry points compile through :class:`EsamPlan`
+    (``core/esam/plan.py``): ``plan(...)`` builds — and caches per network —
+    exactly one jitted (or shard_map-ped) executable for a given
+    (mode, collect, telemetry, read_ports, sharding) tuple.  The historical
+    ``forward*`` methods survive as thin deprecated wrappers over it.
     """
 
     weight_bits: list[jax.Array]
     vth: list[jax.Array]
     out_offset: jax.Array
+    _plan_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
     @property
     def topology(self) -> tuple[int, ...]:
         return tuple([self.weight_bits[0].shape[0]] + [w.shape[1] for w in self.weight_bits])
+
+    # ------------------------------------------------------------------ #
+    # Execution plans — the single compiled entry point
+    # ------------------------------------------------------------------ #
+    def plan(
+        self,
+        *,
+        mode: str = "packed",
+        collect: bool = False,
+        telemetry: bool = False,
+        read_ports: int | tuple[int, ...] = 4,
+        record_vmem_trace: bool = False,
+        interpret: bool | None = None,
+        rules=None,
+    ) -> EsamPlan:
+        """Build (or fetch from this network's cache) one compiled plan.
+
+        ``rules`` takes :func:`repro.distributed.sharding.make_esam_rules`
+        output to compile the plan sharded over a device mesh; plans built
+        with rules are cached by rule-object identity.
+        """
+        spec = PlanSpec(
+            mode=mode,
+            collect=collect,
+            telemetry=telemetry,
+            read_ports=read_ports,
+            record_vmem_trace=record_vmem_trace,
+            interpret=interpret,
+        )
+        key = (spec, None if rules is None else id(rules))
+        cached = self._plan_cache.get(key)
+        if cached is None:
+            cached = EsamPlan(self, spec, rules=rules)
+            self._plan_cache[key] = cached
+        return cached
 
     @property
     def n_neurons(self) -> int:
@@ -52,24 +113,21 @@ class EsamNetwork:
         return sum(int(np.prod(w.shape)) for w in self.weight_bits)
 
     # ------------------------------------------------------------------ #
-    # Functional (batched, MXU-friendly) plane
+    # Functional (batched, MXU-friendly) plane — deprecated wrappers
     # ------------------------------------------------------------------ #
     def forward(self, spikes: jax.Array, collect: bool = False):
         """Batched inference. spikes: bool[..., n_in] -> logits float[..., n_cls].
 
         The final tile's V_mem plus the folded offset is the classification
         score (output neurons are read out, not thresholded — argmax readout).
+
+        .. deprecated:: use ``plan(mode="functional")``.
         """
-        per_layer = []
-        s = spikes
-        for w, th in zip(self.weight_bits[:-1], self.vth[:-1]):
-            s, _ = tile_mod.functional_tile(w, s, th)
-            per_layer.append(s)
-        _, vmem = tile_mod.functional_tile(self.weight_bits[-1], s, self.vth[-1])
-        logits = vmem.astype(jnp.float32) + self.out_offset
+        _warn_deprecated("forward", 'mode="functional"')
+        res = self.plan(mode="functional", collect=collect)(spikes)
         if collect:
-            return logits, per_layer
-        return logits
+            return res.logits, list(res.planes)
+        return res.logits
 
     def spike_counts(
         self, spikes: jax.Array, per_layer: Sequence[jax.Array] | None = None
@@ -81,15 +139,13 @@ class EsamNetwork:
 
         ``per_layer`` takes the hidden-layer spikes a caller already computed
         via ``forward(..., collect=True)`` — the counts are then pure
-        reductions and no tile matmul is re-run.
+        reductions and no tile matmul is re-run.  Without it the functional
+        plan runs once with telemetry on.
         """
-        if per_layer is None:
-            per_layer = []
-            s = spikes
-            for w, th in zip(self.weight_bits[:-1], self.vth[:-1]):
-                s, _ = tile_mod.functional_tile(w, s, th)
-                per_layer.append(s)
         n_hidden = len(self.weight_bits) - 1
+        if per_layer is None:
+            return list(
+                self.plan(mode="functional", telemetry=True)(spikes).loads)
         assert len(per_layer) >= n_hidden, (len(per_layer), n_hidden)
         layer_inputs = [spikes, *per_layer[:n_hidden]]
         return [
@@ -97,7 +153,7 @@ class EsamNetwork:
         ]
 
     # ------------------------------------------------------------------ #
-    # Packed (bit-plane) fused plane — the inter-tile pulse bus on TPU
+    # Packed (bit-plane) fused plane — deprecated wrappers
     # ------------------------------------------------------------------ #
     def forward_fused(
         self, spikes: jax.Array, *, interpret: bool | None = None
@@ -106,14 +162,12 @@ class EsamNetwork:
         the input, every hidden tile runs the fused MAC+fire+re-pack kernel
         (kernels/cim_matmul_packed), and only uint32 bitplanes — 32 spikes per
         lane word, the paper's parallel-pulse wire — travel between tiles.
-        Logits are bit-identical to ``forward`` (tested)."""
-        from repro.core import packing
+        Logits are bit-identical to ``forward`` (tested).
 
-        n_in = spikes.shape[-1]
-        lead = spikes.shape[:-1]
-        packed = packing.pack_spikes(spikes.reshape(-1, n_in))
-        logits = self.forward_fused_packed(packed, interpret=interpret)
-        return logits.reshape(*lead, logits.shape[-1])
+        .. deprecated:: use ``plan()`` (packed is the default mode).
+        """
+        _warn_deprecated("forward_fused", 'mode="packed"')
+        return self.plan(mode="packed", interpret=interpret)(spikes).logits
 
     def forward_prefix_packed(
         self, packed: jax.Array, *, interpret: bool | None = None
@@ -121,21 +175,23 @@ class EsamNetwork:
         """Run only the frozen hidden tiles on the packed plane.
 
         Takes and returns the uint32 bitplane wire format: the result is the
-        last tile's *input* spike plane, uint32[B, n_hidden/32].  This is the
-        prefix the online-learning plane consumes (via the module-level
-        ``packed_prefix``) — the learned last tile is excluded, so the prefix
-        can be computed once and reused across epochs.
+        last tile's *input* spike plane, uint32[B, n_hidden/32] — the prefix
+        the online-learning plane reuses across epochs.
+
+        .. deprecated:: use ``plan(mode="prefix")``.
         """
-        return packed_prefix(
-            self.weight_bits, self.vth, packed, interpret=interpret
-        )
+        _warn_deprecated("forward_prefix_packed", 'mode="prefix"')
+        return self.plan(mode="prefix", interpret=interpret)(packed).prefix
 
     def forward_fused_packed(
         self, packed: jax.Array, *, interpret: bool | None = None
     ) -> jax.Array:
-        """Fused cascade over pre-packed spikes uint32[B, ceil(n_in/32)]."""
-        logits, _ = self.forward_fused_packed_collect(packed, interpret=interpret)
-        return logits
+        """Fused cascade over pre-packed spikes uint32[B, ceil(n_in/32)].
+
+        .. deprecated:: use ``plan(mode="packed")``.
+        """
+        _warn_deprecated("forward_fused_packed", 'mode="packed"')
+        return self.plan(mode="packed", interpret=interpret)(packed).logits
 
     def forward_fused_packed_collect(
         self, packed: jax.Array, *, interpret: bool | None = None
@@ -143,19 +199,17 @@ class EsamNetwork:
         """``forward_fused_packed`` plus the tile-input bitplane at every tile
         boundary — one pass, nothing unpacked.  The planes' group popcounts
         (``packing.group_popcount``) are the measured arbiter loads, so the
-        serving plane's cost telemetry rides the packed datapath for free."""
-        from repro.kernels.cim_matmul_packed import ops as packed_ops
+        serving plane's cost telemetry rides the packed datapath for free.
 
-        p, planes = packed_prefix(
-            self.weight_bits, self.vth, packed, interpret=interpret, collect=True
-        )
-        vmem = packed_ops.cim_matmul_packed(
-            p, self.weight_bits[-1], interpret=interpret
-        )
-        return vmem.astype(jnp.float32) + self.out_offset, planes
+        .. deprecated:: use ``plan(mode="packed", collect=True)``.
+        """
+        _warn_deprecated("forward_fused_packed_collect",
+                         'mode="packed", collect=True')
+        res = self.plan(mode="packed", collect=True, interpret=interpret)(packed)
+        return res.logits, list(res.planes)
 
     # ------------------------------------------------------------------ #
-    # Cycle-accurate (event-driven) plane
+    # Cycle-accurate (event-driven) plane — deprecated wrappers
     # ------------------------------------------------------------------ #
     def forward_cycle_accurate(
         self, spikes1: jax.Array, ports: int, record_vmem_trace: bool = False
@@ -165,15 +219,15 @@ class EsamNetwork:
         Returns (logits, [TileTrace per tile]).  Output logits are bit-identical
         to ``forward`` (tested) — the multiport schedule only changes *when*
         contributions accumulate, never their sum.
+
+        .. deprecated:: use ``plan(mode="cycle", read_ports=ports)``.
         """
-        traces = []
-        s = spikes1
-        for w, th in zip(self.weight_bits, self.vth):
-            tr = tile_mod.simulate_tile(w, s, th, ports, record_vmem_trace)
-            traces.append(tr)
-            s = tr.out_spikes
-        logits = traces[-1].vmem_final.astype(jnp.float32) + self.out_offset
-        return logits, traces
+        _warn_deprecated("forward_cycle_accurate", 'mode="cycle"')
+        res = self.plan(
+            mode="cycle", read_ports=int(ports),
+            record_vmem_trace=record_vmem_trace,
+        )(spikes1)
+        return res.logits, list(res.traces)
 
     def forward_cycle_accurate_batch(
         self, spikes: jax.Array, ports: int, record_vmem_trace: bool = False
@@ -184,15 +238,15 @@ class EsamNetwork:
         [batched TileTrace per tile]) — each trace field has a leading batch
         axis.  With the default ``record_vmem_trace=False`` the per-sample
         state stays O(n_out), which is what makes this plane batchable.
+
+        .. deprecated:: use ``plan(mode="cycle", read_ports=ports)``.
         """
-        traces = []
-        s = spikes
-        for w, th in zip(self.weight_bits, self.vth):
-            tr = tile_mod.simulate_tile_batch(w, s, th, ports, record_vmem_trace)
-            traces.append(tr)
-            s = tr.out_spikes
-        logits = traces[-1].vmem_final.astype(jnp.float32) + self.out_offset
-        return logits, traces
+        _warn_deprecated("forward_cycle_accurate_batch", 'mode="cycle"')
+        res = self.plan(
+            mode="cycle", read_ports=int(ports),
+            record_vmem_trace=record_vmem_trace,
+        )(spikes)
+        return res.logits, list(res.traces)
 
     def port_sweep(
         self,
@@ -204,8 +258,10 @@ class EsamNetwork:
 
         Runs the rank-schedule plane through every tile for each cell option
         in ``read_ports`` (0 = the 1RW baseline reading through its RW port),
-        all inside ONE jitted call — the Fig 8 workload as a single device
-        program instead of a Python loop of simulations.
+        all inside ONE compiled plan — the Fig 8 workload as a single device
+        program instead of a Python loop of simulations.  Cell options
+        sharing an effective port count (0 and 1: the 1RW cell reads through
+        its single RW port) share one simulation inside the plan.
 
         spikes: bool[batch, n_in].  Returns {read_ports: (logits, traces)};
         logits are identical across entries (the schedule only moves *when*
@@ -213,11 +269,11 @@ class EsamNetwork:
         the cost model consumes.
         """
         rp = tuple(int(p) for p in read_ports)
-        out = _port_sweep_jit(
-            self.weight_bits, self.vth, self.out_offset, spikes, rp,
-            record_vmem_trace,
-        )
-        return dict(zip(rp, out))
+        res = self.plan(
+            mode="cycle", read_ports=rp, record_vmem_trace=record_vmem_trace
+        )(spikes)
+        return {p: (res.sweep[p]["logits"], list(res.sweep[p]["traces"]))
+                for p in rp}
 
     def measured_activity(
         self,
@@ -229,81 +285,20 @@ class EsamNetwork:
         Returns per tile float64[batch, n_groups] — the *measured* activity
         profile (vs the synthetic ``reference_activity``).  Pass the traces of
         a ``port_sweep``/``forward_cycle_accurate_batch`` run to reuse the
-        spikes the simulator actually drained; otherwise the functional plane
-        recomputes the hidden layers.
+        spikes the simulator actually drained; otherwise the functional plan
+        runs once with telemetry on.
         """
-        per_layer = None
         if traces is not None:
             per_layer = [tr.out_spikes for tr in traces[:-1]]
-        counts = self.spike_counts(spikes, per_layer=per_layer)
+            counts = self.spike_counts(spikes, per_layer=per_layer)
+        else:
+            counts = self.plan(mode="functional", telemetry=True)(spikes).loads
         return [np.asarray(c, np.float64) for c in counts]
 
 
-@partial(jax.jit, static_argnames=("read_ports", "record_vmem_trace"))
-def _port_sweep_jit(
-    weight_bits, vth, out_offset, spikes, read_ports: tuple[int, ...],
-    record_vmem_trace: bool,
-):
-    """One device program for the whole port sweep (unrolled over options —
-    each option has its own static schedule length ceil(128/p)).  Cell
-    options sharing an effective port count (0 and 1: the 1RW cell reads
-    through its single RW port) share one simulation."""
-    by_ports: dict[int, tuple] = {}
-    out = []
-    for p in read_ports:
-        ports = max(1, p)
-        if ports not in by_ports:
-            traces = []
-            s = spikes
-            for w, th in zip(weight_bits, vth):
-                tr = tile_mod.simulate_tile_batch(w, s, th, ports, record_vmem_trace)
-                traces.append(tr)
-                s = tr.out_spikes
-            logits = traces[-1].vmem_final.astype(jnp.float32) + out_offset
-            by_ports[ports] = (logits, traces)
-        out.append(by_ports[ports])
-    return out
-
-
-def packed_prefix(
-    weight_bits: Sequence[jax.Array],
-    vth: Sequence[jax.Array],
-    packed: jax.Array,
-    *,
-    interpret: bool | None = None,
-    collect: bool = False,
-):
-    """Cascade the hidden tiles (all but the last) on the packed plane.
-
-    The single source of the packed prefix datapath: both inference
-    (``EsamNetwork.forward_prefix_packed`` / ``forward_fused_packed``) and the
-    online-learning plane (``learning.last_hidden_spikes``) run their frozen
-    tiles through here, so the learning plane's pre-synaptic trace can never
-    desynchronize from the serving datapath.
-
-    Hidden widths must be multiples of 32 (they are 128-aligned tile columns
-    in every paper topology) so fired planes re-pack exactly.
-
-    ``collect=True`` returns (prefix, [tile-input bitplane per tile]) — the
-    packed wire at every tile boundary, including the last tile's input
-    (== the prefix), which is all the cost-model telemetry needs: arbiter
-    loads are popcounts of these planes.
-    """
-    from repro.kernels.cim_matmul_packed import ops as packed_ops
-
-    for w in weight_bits[:-1]:
-        assert w.shape[1] % 32 == 0, (
-            "hidden width must be 32-aligned for the packed plane",
-            w.shape,
-        )
-    p = packed
-    planes = [p]
-    for w, th in zip(weight_bits[:-1], vth[:-1]):
-        p = packed_ops.esam_layer_packed(p, w, th, interpret=interpret)
-        planes.append(p)
-    if collect:
-        return p, planes
-    return p
+#: Back-compat alias: the packed hidden-tile cascade now lives in
+#: ``core/esam/plan.py`` (the plan layer is its single owner).
+packed_prefix = plan_mod._packed_cascade
 
 
 # ---------------------------------------------------------------------- #

@@ -1,0 +1,378 @@
+"""Execution plans: ONE compiled entry point for every ESAM forward variant.
+
+Event-based CIM accelerators get their efficiency from a *fixed dataflow
+plan*: the schedule of a layer-stationary pipeline is decided once, before
+any spike moves (Chauvaux et al.; Moitra et al.).  This module is that plan
+layer for the repo.  An :class:`EsamPlan` is built once from
+
+    (EsamNetwork, mode, collect, telemetry, read_ports, sharding rules)
+
+and compiles exactly one jitted — or, with sharding rules, one
+``shard_map``-ped — executable.  Every consumer (the seven legacy
+``EsamNetwork.forward*`` wrappers, ``port_sweep``, ``measured_activity``,
+the online-learning driver, the serving engine, the benchmarks) runs through
+a plan, so the packing, prefix-reuse, popcount-telemetry and cost plumbing
+lives here and nowhere else.
+
+Modes
+-----
+``functional``  dense MAC cascade (bool spikes between tiles) — the oracle.
+``packed``      the bit-packed fused cascade: uint32 bitplanes on the wire,
+                Pallas MAC+fire+re-pack per hidden tile (the fast plane).
+``prefix``      hidden tiles only; returns the last tile's *input* plane
+                (packed when every hidden width is 32-aligned, else bool) —
+                what the online-learning plane reuses across epochs.
+``cycle``       the rank-schedule cycle-accurate plane; with a tuple of
+                cell options in ``read_ports`` it becomes the full Fig 8
+                port sweep compiled as one executable.
+
+Orthogonal flags: ``collect`` returns the inter-tile planes, ``telemetry``
+returns the per-tile arbiter loads (group popcounts straight off the wire).
+
+Sharding
+--------
+Pass :class:`~repro.distributed.sharding.ShardingRules` built by
+``sharding.make_esam_rules``: the batch is sharded over the ``spike_batch``
+mesh axes (weights replicated), and hidden-layer columns are additionally
+sharded over the ``tile_col`` axis where widths divide evenly — each device
+fires its slice of a tile's neurons and the fired plane is all-gathered onto
+the inter-tile pulse bus.  Both layouts are bit-identical to the
+single-device plan (integer datapath, deterministic gather order; enforced
+by tests on an ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packing
+from repro.core.esam import arbiter as arb
+from repro.core.esam import tile as tile_mod
+
+MODES = ("functional", "packed", "prefix", "cycle")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """Static description of one compiled ESAM executable."""
+
+    mode: str = "packed"
+    collect: bool = False
+    telemetry: bool = False
+    #: cell option(s).  An int for a single plan; a tuple of cell options
+    #: turns ``cycle`` mode into the one-executable port sweep.
+    read_ports: int | tuple[int, ...] = 4
+    record_vmem_trace: bool = False
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        assert self.mode in MODES, (self.mode, MODES)
+        if isinstance(self.read_ports, tuple):
+            assert self.mode == "cycle", "read_ports sweep needs mode='cycle'"
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """Outputs of one plan execution (fields populated per spec).
+
+    ``planes`` carries what travels the inter-tile wire in that mode: the
+    hidden layers' output spikes (``functional``) or the tile-input uint32
+    bitplanes including the network input (``packed``) — matching what the
+    legacy ``forward(collect=True)`` / ``forward_fused_packed_collect``
+    returned.  ``loads`` are int32 arbiter loads per tile input,
+    ``[..., n_groups]`` — the cost model's measured activity.
+    """
+
+    logits: Optional[jax.Array] = None
+    planes: Optional[tuple] = None
+    loads: Optional[tuple] = None
+    traces: Optional[tuple] = None           # TileTrace per tile (cycle mode)
+    prefix: Optional[jax.Array] = None       # prefix mode only
+    sweep: Optional[Mapping[int, Any]] = None  # {cell option: {logits, traces}}
+
+
+def _packed_cascade(
+    weight_bits: Sequence[jax.Array],
+    vth: Sequence[jax.Array],
+    packed: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+    collect: bool = False,
+    col_axis: Optional[str] = None,
+    col_shard: Optional[Sequence[bool]] = None,
+):
+    """Cascade the hidden tiles (all but the last) on the packed plane.
+
+    The single source of the packed prefix datapath: inference
+    (``EsamPlan`` packed/prefix modes, the legacy ``forward*`` wrappers) and
+    the online-learning plane (``learning.last_hidden_spikes``) all run
+    their frozen tiles through here, so the learning plane's pre-synaptic
+    trace can never desynchronize from the serving datapath.
+
+    Hidden widths must be multiples of 32 (128-aligned tile columns in every
+    paper topology) so fired planes re-pack exactly.  Under ``tile_col``
+    sharding (``col_axis`` inside a shard_map) each device holds a 32-aligned
+    column slice of the flagged layers and the fired plane is all-gathered —
+    word order equals column order, so the gathered plane is bit-identical
+    to the unsharded wire.
+
+    ``collect=True`` returns (prefix, [tile-input bitplane per tile]).
+    """
+    from repro.kernels.cim_matmul_packed import ops as packed_ops
+
+    for w in weight_bits[:-1]:
+        assert w.shape[1] % 32 == 0, (
+            "hidden width must be 32-aligned for the packed plane",
+            w.shape,
+        )
+    p = packed
+    planes = [p]
+    for i, (w, th) in enumerate(zip(weight_bits[:-1], vth[:-1])):
+        p = packed_ops.esam_layer_packed(p, w, th, interpret=interpret)
+        if col_shard is not None and col_shard[i]:
+            p = jax.lax.all_gather(p, col_axis, axis=-1, tiled=True)
+        planes.append(p)
+    if collect:
+        return p, planes
+    return p
+
+
+class EsamPlan:
+    """One compiled ESAM executable, built once and reused for every batch.
+
+    Call the plan with spikes ``{0,1}[..., n_in]`` (any dtype / leading
+    shape) or, for the packed modes, pre-packed ``uint32[..., n_in/32]``
+    wire-format planes; leading dims are flattened into one batch axis, the
+    batch is zero-padded to the sharding's divisibility requirement (exact:
+    a silent spike never contributes to the CIM MAC), and every output is
+    unpadded and reshaped back.  Returns a :class:`PlanResult`.
+    """
+
+    def __init__(
+        self,
+        network,
+        spec: PlanSpec,
+        rules=None,  # Optional[sharding.ShardingRules]
+    ):
+        self.spec = spec
+        self.rules = rules
+        self.network = network
+        self.topology = network.topology
+        n_tiles = len(self.topology) - 1
+        hidden_ok = all(
+            w.shape[1] % 32 == 0 for w in network.weight_bits[:-1]
+        )
+        if spec.mode == "packed":
+            assert hidden_ok, (
+                "packed plan needs 32-aligned hidden widths", self.topology)
+        #: prefix mode runs packed when the hidden widths allow it, else the
+        #: dense functional tiles — both bit-identical (tests/test_packing).
+        self.prefix_packed = spec.mode == "prefix" and hidden_ok
+        self._packed_input = spec.mode == "packed" or self.prefix_packed
+        self._n_in = self.topology[0]
+        self._in_width = (
+            packing.packed_width(self._n_in) if self._packed_input else self._n_in
+        )
+
+        # -------- sharding geometry (static, decided at build time) -------
+        if rules is None:
+            self._batch_axes: tuple[str, ...] = ()
+            self._col_axis = None
+            self._dp = 1
+            col_size = 1
+        else:
+            self._batch_axes = rules.mesh_axes("spike_batch")
+            assert self._batch_axes, "ESAM rules must map spike_batch"
+            self._dp = rules.axis_size("spike_batch")
+            col_axes = rules.mesh_axes("tile_col")
+            assert len(col_axes) <= 1, "tile_col maps to at most one mesh axis"
+            self._col_axis = col_axes[0] if col_axes else None
+            col_size = rules.axis_size("tile_col")
+            if spec.mode == "cycle":
+                assert col_size == 1, "cycle plans are data-parallel only"
+        lane = packing.LANE_BITS if self._packed_input else 1
+        self._col_shard = tuple(
+            self._col_axis is not None
+            and i < n_tiles - 1
+            and self.topology[i + 1] % (col_size * lane) == 0
+            and col_size > 1
+            for i in range(n_tiles)
+        )
+        self._exec = self._compile()
+
+    # ------------------------------------------------------------------ #
+    # the single compiled executable
+    # ------------------------------------------------------------------ #
+    def _make_fn(self):
+        spec = self.spec
+        col_axis = self._col_axis
+        col_shard = self._col_shard if any(self._col_shard) else None
+        topo = self.topology
+
+        def gather(x):
+            return jax.lax.all_gather(x, col_axis, axis=-1, tiled=True)
+
+        def dense_prefix(wb, vth, s):
+            hidden = []
+            for i, (w, th) in enumerate(zip(wb[:-1], vth[:-1])):
+                s, _ = tile_mod.functional_tile(w, s, th)
+                if col_shard is not None and col_shard[i]:
+                    s = gather(s)
+                hidden.append(s)
+            return s, hidden
+
+        def fn(params, x):
+            wb, vth = params["weight_bits"], params["vth"]
+            off = params["out_offset"]
+            out: dict[str, Any] = {}
+            if spec.mode == "functional":
+                s, hidden = dense_prefix(wb, vth, x)
+                _, vmem = tile_mod.functional_tile(wb[-1], s, vth[-1])
+                out["logits"] = vmem.astype(jnp.float32) + off
+                if spec.collect:
+                    out["planes"] = tuple(hidden)
+                if spec.telemetry:
+                    out["loads"] = tuple(
+                        arb.split_row_groups(si.astype(jnp.int32)).sum(-1)
+                        for si in [x, *hidden]
+                    )
+            elif spec.mode == "packed":
+                from repro.kernels.cim_matmul_packed import ops as packed_ops
+
+                p, planes = _packed_cascade(
+                    wb, vth, x, interpret=spec.interpret, collect=True,
+                    col_axis=col_axis, col_shard=col_shard,
+                )
+                vmem = packed_ops.cim_matmul_packed(
+                    p, wb[-1], interpret=spec.interpret)
+                out["logits"] = vmem.astype(jnp.float32) + off
+                if spec.collect:
+                    out["planes"] = tuple(planes)
+                if spec.telemetry:
+                    out["loads"] = tuple(
+                        packing.group_popcount(pl) for pl in planes
+                    )
+            elif spec.mode == "prefix":
+                if self.prefix_packed:
+                    p, planes = _packed_cascade(
+                        wb, vth, x, interpret=spec.interpret, collect=True,
+                        col_axis=col_axis, col_shard=col_shard,
+                    )
+                else:
+                    p, planes_b = dense_prefix(wb, vth, x)
+                    planes = [x, *planes_b]
+                out["prefix"] = p
+                if spec.collect:
+                    out["planes"] = tuple(planes)
+                if spec.telemetry:
+                    out["loads"] = tuple(
+                        packing.group_popcount(pl) if self.prefix_packed
+                        else arb.split_row_groups(pl.astype(jnp.int32)).sum(-1)
+                        for pl in planes
+                    )
+            else:  # cycle
+                rp = spec.read_ports
+                sweep = isinstance(rp, tuple)
+                options = rp if sweep else (rp,)
+                by_ports: dict[int, dict] = {}
+                per_option: dict[int, dict] = {}
+                for opt in options:
+                    ports = max(1, int(opt))
+                    if ports not in by_ports:
+                        traces = []
+                        s = x
+                        for w, th in zip(wb, vth):
+                            tr = tile_mod.simulate_tile_batch(
+                                w, s, th, ports, spec.record_vmem_trace)
+                            traces.append(tr)
+                            s = tr.out_spikes
+                        logits = traces[-1].vmem_final.astype(jnp.float32) + off
+                        by_ports[ports] = {
+                            "logits": logits, "traces": tuple(traces)}
+                    per_option[int(opt)] = by_ports[ports]
+                if sweep:
+                    out["sweep"] = per_option
+                else:
+                    res = per_option[int(rp)]
+                    out["logits"] = res["logits"]
+                    out["traces"] = res["traces"]
+                if spec.telemetry:
+                    any_traces = next(iter(by_ports.values()))["traces"]
+                    inputs = [x, *(tr.out_spikes for tr in any_traces[:-1])]
+                    out["loads"] = tuple(
+                        arb.split_row_groups(si.astype(jnp.int32)).sum(-1)
+                        for si in inputs
+                    )
+            return out
+
+        return fn
+
+    def _compile(self):
+        fn = self._make_fn()
+        if self.rules is None:
+            return jax.jit(fn)
+        from repro import compat
+
+        ba = self._batch_axes if len(self._batch_axes) > 1 else self._batch_axes[0]
+        ca = self._col_axis
+        w_specs = tuple(
+            P(None, ca) if sh else P(None, None) for sh in self._col_shard
+        )
+        v_specs = tuple(P(ca) if sh else P(None) for sh in self._col_shard)
+        params_spec = {
+            "weight_bits": w_specs, "vth": v_specs, "out_offset": P(None),
+        }
+        mapped = compat.shard_map(
+            fn,
+            mesh=self.rules.mesh,
+            in_specs=(params_spec, P(ba, None)),
+            out_specs=P(ba),
+        )
+        return jax.jit(mapped)
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def _normalize(self, x) -> tuple[jax.Array, tuple[int, ...]]:
+        """Coerce input to a flat 2-D batch; returns (x2d, leading shape)."""
+        x = jnp.asarray(x)
+        lead = x.shape[:-1]
+        if self._packed_input:
+            if x.dtype == jnp.uint32 and x.shape[-1] == self._in_width:
+                pass                                  # already wire format
+            elif x.shape[-1] == self._n_in:
+                x = packing.pack_spikes(x != 0)       # spikes -> wire format
+            else:
+                raise ValueError(
+                    f"expected spikes[..., {self._n_in}] or packed "
+                    f"uint32[..., {self._in_width}], got {x.shape} {x.dtype}")
+        else:
+            if x.shape[-1] != self._n_in:
+                raise ValueError(
+                    f"expected spikes[..., {self._n_in}], got {x.shape}")
+            x = x.astype(bool)
+        return x.reshape(-1, x.shape[-1]), lead
+
+    def __call__(self, x) -> PlanResult:
+        x, lead = self._normalize(x)
+        b = x.shape[0]
+        pad = (-b) % self._dp
+        if pad:
+            x = jnp.pad(x, ((0, pad), (0, 0)))
+        # weights are read from the network at call time (shapes are fixed at
+        # build; values may change — e.g. a learned readout swapped in), so a
+        # cached plan can never serve stale parameters
+        params = {
+            "weight_bits": tuple(self.network.weight_bits),
+            "vth": tuple(self.network.vth),
+            "out_offset": self.network.out_offset,
+        }
+        out = self._exec(params, x)
+        out = jax.tree_util.tree_map(
+            lambda a: a[:b].reshape(lead + a.shape[1:]), out)
+        return PlanResult(**out)

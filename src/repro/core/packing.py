@@ -105,3 +105,29 @@ def unpack_spikes_np(packed: np.ndarray, n: int, dtype=np.int8) -> np.ndarray:
     bits = (packed[..., None] >> shifts) & np.uint32(1)
     flat = bits.reshape(packed.shape[:-1] + (w * LANE_BITS,))
     return flat[..., :n].astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# host-side batch prep — the single copy of pad-to-batch + pack
+# --------------------------------------------------------------------- #
+def pad_spike_rows_np(rows, batch: int, n_in: int) -> np.ndarray:
+    """Stack per-request spike rows into a zero-padded {0,1} uint8 batch.
+
+    ``rows``: sequence of {0,1}[n_in] arrays (any dtype), ``len(rows) <=
+    batch``.  Unused slots stay all-zero ("silent"), which is exact padding
+    for the binary CIM MAC.  This is the one host-side pad-to-batch
+    implementation — the serving engine, the serving bench, and the examples
+    all batch through here instead of each rolling their own.
+    """
+    assert len(rows) <= batch, (len(rows), batch)
+    out = np.zeros((batch, n_in), np.uint8)
+    for i, r in enumerate(rows):
+        r = np.asarray(r)
+        assert r.shape == (n_in,), (r.shape, n_in)
+        out[i] = r != 0
+    return out
+
+
+def pack_padded_rows_np(rows, batch: int, n_in: int) -> np.ndarray:
+    """``pad_spike_rows_np`` straight into the uint32 wire format."""
+    return pack_spikes_np(pad_spike_rows_np(rows, batch, n_in))

@@ -39,6 +39,20 @@ class ShardingRules:
     def sharding(self, axes: Sequence[Optional[str]]) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec(axes))
 
+    def mesh_axes(self, logical: str) -> tuple[str, ...]:
+        """Mesh axis names a logical axis maps to (empty when replicated)."""
+        ax = self.rules.get(logical)
+        if ax is None:
+            return ()
+        return (ax,) if isinstance(ax, str) else tuple(ax)
+
+    def axis_size(self, logical: str) -> int:
+        """Number of shards a logical axis is split into on this mesh."""
+        axes = self.mesh_axes(logical)
+        if not axes:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
 
 def _divisible(dim: int, mesh: Mesh, axis: object) -> bool:
     if axis is None:
@@ -124,6 +138,47 @@ def make_rules(
         "zero": ("data" if zero1 else None),
     }
     return ShardingRules(rules=rules, mesh=mesh)
+
+
+# --------------------------------------------------------------------- #
+# ESAM spike-plane logical axes (core/esam/plan.py)
+# --------------------------------------------------------------------- #
+#: Logical axes of the ESAM datapath.  ``spike_batch`` is the request/sample
+#: axis of every spike plane and output; ``tile_row`` the pre-synaptic (K)
+#: dim of a tile's synapse matrix — never sharded, the CIM contraction stays
+#: local; ``tile_col`` the post-synaptic (N) dim, shardable for wide layers
+#: (model parallelism: each device owns a slice of a tile's columns and the
+#: fired plane is all-gathered onto the inter-tile pulse bus).
+ESAM_LOGICAL_AXES = ("spike_batch", "tile_row", "tile_col")
+
+
+def make_esam_rules(
+    mesh: Mesh,
+    *,
+    batch_axis: object = "data",
+    col_axis: Optional[object] = None,
+) -> ShardingRules:
+    """Rule set for the ESAM spike plane on ``mesh``.
+
+    The default is pure data parallelism: the batch over ``batch_axis``,
+    every tile's weights replicated.  Passing ``col_axis`` additionally
+    shards hidden-layer columns (``tile_col``) over that mesh axis —
+    ``EsamPlan`` applies it per layer only where the width divides evenly,
+    so narrow layers (the 10-class readout) silently stay replicated.
+    """
+    for ax in (batch_axis, col_axis):
+        for a in ((ax,) if isinstance(ax, str) else tuple(ax or ())):
+            assert a in mesh.axis_names, (a, mesh.axis_names)
+    return ShardingRules(
+        rules={"spike_batch": batch_axis, "tile_row": None, "tile_col": col_axis},
+        mesh=mesh,
+    )
+
+
+def esam_data_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``n_devices`` local devices."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return make_mesh_axes((n,), ("data",))
 
 
 # --------------------------------------------------------------------- #

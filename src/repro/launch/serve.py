@@ -1,43 +1,130 @@
-"""Serving launcher: batched greedy decoding over the unified LM.
+"""Serving launcher: LM decoding or ESAM spike serving.
+
+LM mode (default): batched greedy decoding over the unified LM.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
         --requests 6 --max-new 16
+
+ESAM mode (``--esam``): synthetic spike traffic served end-to-end through
+the sharded execution plan — requests flow through ``SpikeEngine``'s
+admission queue, power-of-two buckets, and the ``shard_map``-ped packed
+plan when more than one device is visible.  Prints the aggregate paper-unit
+operating point (MInf/s + pJ/Inf) next to the wall-clock serving rate.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --esam --smoke
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import base as cb
 from repro.models import lm, params as pm
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, Request, SpikeEngine, SpikeRequest
+
+
+def _lm_main(args):
+    cfg = cb.smoke(args.arch) if args.smoke else cb.get(args.arch)
+    params = pm.init(lm.model_specs(cfg), jax.random.PRNGKey(args.seed))
+    batch_size = 4 if args.batch_size is None else args.batch_size
+    n_requests = 4 if args.requests is None else args.requests
+    eng = Engine(params, cfg, batch_size=batch_size)
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)).astype(np.int32),
+                max_new_tokens=args.max_new)
+        for _ in range(n_requests)
+    ]
+    out = eng.serve(reqs)
+    for i, r in enumerate(out):
+        print(f"req {i}: prompt[{len(r.prompt)}] -> {r.output.tolist()}")
+
+
+def _random_esam_network(topology, seed: int):
+    import jax.numpy as jnp
+
+    from repro.core.esam.network import EsamNetwork
+
+    key = jax.random.PRNGKey(seed)
+    bits, vth = [], []
+    for i in range(len(topology) - 1):
+        k = jax.random.fold_in(key, i)
+        bits.append(jax.random.bernoulli(
+            k, 0.5, (topology[i], topology[i + 1])).astype(jnp.int8))
+        vth.append(jnp.zeros((topology[i + 1],), jnp.int32))
+    return EsamNetwork(
+        weight_bits=bits, vth=vth,
+        out_offset=jnp.zeros((topology[-1],), jnp.float32))
+
+
+def _esam_main(args):
+    from repro.core.esam import cost_model as cm
+    from repro.data import digits
+    from repro.distributed import sharding as shd
+
+    topology = (768, 256, 10) if args.smoke else cm.PAPER_TOPOLOGY
+    n_requests = args.requests if args.requests is not None else (
+        64 if args.smoke else 512)
+    max_batch = 128 if args.batch_size is None else args.batch_size
+    net = _random_esam_network(topology, args.seed)
+
+    rules = None
+    if len(jax.devices()) > 1:
+        rules = shd.make_esam_rules(shd.esam_data_mesh())
+    engine_kw = dict(max_batch=max_batch, telemetry=True,
+                     read_ports=args.read_ports, rules=rules)
+
+    x, _ = digits.make_spike_dataset(n_requests, seed=args.seed)
+    reqs = [SpikeRequest(spikes=x[i]) for i in range(n_requests)]
+    # warm on a throwaway engine serving the SAME workload shape, so every
+    # bucket the timed run dispatches is already compiled (plans are cached
+    # per network) and the timed engine's stats() see only the timed requests
+    SpikeEngine(net, **engine_kw).serve(
+        [SpikeRequest(spikes=r) for r in x])
+    eng = SpikeEngine(net, **engine_kw)
+    t0 = time.perf_counter()
+    eng.serve(reqs)
+    wall_s = time.perf_counter() - t0
+
+    st = eng.stats()
+    print(f"esam-serve: {st['n_requests']} requests "
+          f"(data_parallel={st['data_parallel']}, cell={st['cell']}, "
+          f"buckets={eng._buckets})")
+    print(f"  wall-clock        : {wall_s*1e3:8.1f} ms  "
+          f"({len(reqs)/wall_s:,.0f} req/s)")
+    print(f"  model throughput  : {st['throughput_pipelined_inf_s']/1e6:8.2f} MInf/s "
+          f"(pipelined; paper {cm.PAPER_THROUGHPUT_INF_S/1e6:.0f})")
+    print(f"  model energy      : {st['energy_pj_per_inf']:8.1f} pJ/Inf "
+          f"(paper {cm.PAPER_ENERGY_PJ_PER_INF:.0f})")
+    print(f"  model latency     : {st['latency_ns_mean']:8.1f} ns/inf "
+          f"({st['cycles_mean']:.1f} cycles)")
+    labels = [r.label for r in reqs]
+    assert all(l is not None for l in labels)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--esam", action="store_true",
+                    help="serve ESAM spike traffic through the sharded plan")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="default: 4 (LM), 64 (--esam --smoke), 512 (--esam)")
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="default: 4 (LM), 128 (--esam max_batch)")
+    ap.add_argument("--read-ports", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    cfg = cb.smoke(args.arch) if args.smoke else cb.get(args.arch)
-    params = pm.init(lm.model_specs(cfg), jax.random.PRNGKey(args.seed))
-    eng = Engine(params, cfg, batch_size=args.batch_size)
-    rng = np.random.default_rng(args.seed)
-    reqs = [
-        Request(prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)).astype(np.int32),
-                max_new_tokens=args.max_new)
-        for _ in range(args.requests)
-    ]
-    out = eng.serve(reqs)
-    for i, r in enumerate(out):
-        print(f"req {i}: prompt[{len(r.prompt)}] -> {r.output.tolist()}")
+    if args.esam:
+        _esam_main(args)
+    else:
+        _lm_main(args)
 
 
 if __name__ == "__main__":

@@ -6,9 +6,10 @@ request is prefilled into it).
 
 ``SpikeEngine``: ESAM spike-classification serving on the packed plane —
 requests are bit-packed host-side into the uint32 wire format (32 spikes per
-lane word, the paper's parallel-pulse inter-tile bus) and batched through
-``EsamNetwork.forward_fused_packed``, so neither the server->device transfer
-nor the tile cascade ever materializes an unpacked spike tensor in HBM.
+lane word, the paper's parallel-pulse inter-tile bus) and continuously
+batched through ONE compiled ``EsamPlan`` (optionally ``shard_map``-ped over
+a device mesh), so neither the server->device transfer nor the tile cascade
+ever materializes an unpacked spike tensor in HBM.
 """
 
 from __future__ import annotations
@@ -102,7 +103,7 @@ class Engine:
 
 
 # ------------------------------------------------------------------ #
-# ESAM spike-classification serving (packed plane)
+# ESAM spike-classification serving (packed plane, plan-compiled)
 # ------------------------------------------------------------------ #
 @dataclasses.dataclass
 class SpikeRequest:
@@ -116,105 +117,201 @@ class SpikeRequest:
     energy_pj: Optional[float] = None      # per-inference energy (pJ/inf)
 
 
+def _bucket_sizes(max_batch: int, min_bucket: int, dp: int) -> list[int]:
+    """Power-of-two bucket ladder: min_bucket, 2*min_bucket, ... >= max_batch.
+
+    Every bucket is a multiple of the data-parallel degree ``dp`` so a padded
+    batch always divides the mesh; the smallest bucket never exceeds the
+    (rounded-up) ``max_batch`` itself.
+    """
+    top = 1
+    while top < max_batch:
+        top <<= 1
+    lo = max(min(min_bucket, top), dp)
+    b = 1
+    while b < lo:
+        b <<= 1
+    sizes = [b]
+    while sizes[-1] < top:
+        sizes.append(sizes[-1] * 2)
+    return sizes
+
+
 class SpikeEngine:
-    """Fixed-slot batched inference over an ``EsamNetwork``.
+    """Continuously-batched ESAM serving over one compiled execution plan.
 
-    Requests are packed on the host (numpy — no device round-trip) and padded
-    to ``batch_size`` slots; silent (all-zero) pad rows are exact because a
-    zero spike never contributes to the CIM MAC.
+    Requests enter an admission queue (``submit``; ``serve`` is submit+drain)
+    and are dispatched in multi-batch rounds of up to ``max_batch`` requests.
+    Each round is zero-padded up to the next power-of-two bucket
+    (``min_bucket``-based ladder, always a multiple of the data-parallel
+    degree) so the compiled plan sees a handful of static shapes instead of
+    one per queue length — silent pad rows are exact for the binary CIM MAC.
+    Packing happens on the host (numpy — the device only ever sees the uint32
+    wire format); with ``rules`` the plan is compiled ``shard_map``-ped over
+    the mesh and each bucket is sharded over the ``spike_batch`` axes.
 
-    With ``telemetry=True`` every served request additionally carries the
-    hardware cost the simulated macro would pay for it — cycles, latency and
-    pJ/inf from ``cost_model.request_stats`` on the request's *measured*
-    arbiter loads (the same accounting ``network.system_stats`` averages for
-    the Fig 8 operating points) — and ``stats()`` reports the running
-    aggregate in paper units.
+    With ``telemetry=True`` the plan additionally returns each tile's
+    arbiter loads (group popcounts of the inter-tile bitplanes — same pass,
+    nothing unpacked) and the paper-unit hardware cost is computed *on
+    device* (``cost_model.request_stats_device``), staying device-resident
+    through the whole dispatch loop: the engine performs no per-batch host
+    sync — per-request costs land on the host in one flush at drain end
+    (where the running aggregate folds into exact float64 totals, immune to
+    float32 drift over long-lived engines), and ``stats()`` is a pure host
+    read.
     """
 
-    def __init__(self, net, *, batch_size: int = 128,
+    def __init__(self, net, *, max_batch: int = 128, min_bucket: int = 8,
                  interpret: Optional[bool] = None,
-                 telemetry: bool = False, read_ports: int = 4):
+                 telemetry: bool = False, read_ports: int = 4,
+                 rules: Optional[shd.ShardingRules] = None,
+                 batch_size: Optional[int] = None):
         from repro.core import packing
+        from repro.core.esam import cost_model as cm
 
+        if batch_size is not None:   # deprecated alias (pre-plan engine)
+            max_batch = batch_size
         self.net = net
-        self.batch_size = batch_size
+        self.max_batch = max_batch
         self.n_in = net.topology[0]
         self.telemetry = telemetry
         self.read_ports = read_ports
+        self.rules = rules
         self._packing = packing
-        self._fwd = jax.jit(
-            lambda packed: net.forward_fused_packed(packed, interpret=interpret)
-        )
-
-        # Telemetry variant: same single packed pass, but it also returns the
-        # per-tile arbiter loads (group popcounts of the inter-tile bitplanes)
-        # — no second forward, no unpacked spike tensor.
-        def _fwd_collect(packed):
-            logits, planes = net.forward_fused_packed_collect(
-                packed, interpret=interpret)
-            return logits, tuple(packing.group_popcount(p) for p in planes)
-
-        self._fwd_telemetry = jax.jit(_fwd_collect)
+        self._cm = cm
+        dp = 1 if rules is None else rules.axis_size("spike_batch")
+        self._buckets = _bucket_sizes(max_batch, min_bucket, dp)
+        self._plan = net.plan(
+            mode="packed", telemetry=telemetry, interpret=interpret,
+            rules=rules)
+        n_tiles = len(net.topology) - 1
+        # admission queue + per-round device results awaiting one host flush
+        self._pending: list[SpikeRequest] = []
+        self._inflight: list[tuple[list[SpikeRequest], jax.Array, Optional[dict]]] = []
+        # exact float64 telemetry totals, folded in at each drain flush
         self._served = 0
-        self._cycles_total = 0.0
-        self._latency_ns_total = 0.0
-        self._energy_pj_total = 0.0
+        self._totals = {
+            "cycles": 0.0,
+            "cycles_per_tile": np.zeros((n_tiles,), np.float64),
+            "latency_ns": 0.0,
+            "energy_pj": 0.0,
+        }
 
-    def serve(self, requests: list[SpikeRequest]) -> list[SpikeRequest]:
-        queue = list(requests)
-        while queue:
-            batch_reqs = queue[: self.batch_size]
-            queue = queue[self.batch_size:]
-            self._serve_batch(batch_reqs)
-        return requests
+    # -------------------------------------------------------------- #
+    # admission + dispatch
+    # -------------------------------------------------------------- #
+    def submit(self, requests) -> None:
+        """Queue requests without dispatching (single request or list)."""
+        if isinstance(requests, SpikeRequest):
+            requests = [requests]
+        self._pending.extend(requests)
 
+    def serve(self, requests=None) -> list[SpikeRequest]:
+        """Enqueue ``requests`` (optional), drain the queue, flush results.
+
+        Returns the list of requests served in this call (the passed-in list
+        when given, else everything that was pending)."""
+        if requests is not None:
+            self.submit(requests)
+            out = requests if isinstance(requests, list) else [requests]
+        else:
+            out = list(self._pending)
+        while self._pending:
+            round_reqs = self._pending[: self.max_batch]
+            del self._pending[: self.max_batch]
+            self._dispatch(round_reqs)
+        self._flush()
+        return out
+
+    def _bucket(self, n: int) -> int:
+        for b in self._buckets:
+            if n <= b:
+                return b
+        return self._buckets[-1]
+
+    def _dispatch(self, reqs: list[SpikeRequest]) -> None:
+        """One continuous-batching round: pad to bucket, run the plan, keep
+        every result device-side (no host sync here)."""
+        bucket = self._bucket(len(reqs))
+        packed = jnp.asarray(self._packing.pack_padded_rows_np(
+            [r.spikes for r in reqs], bucket, self.n_in))
+        res = self._plan(packed)
+        rs = None
+        if self.telemetry:
+            # lazy device-side cost — nothing is synced inside the drain loop
+            rs = self._cm.request_stats_device(
+                self.net.topology, res.loads, self.read_ports)
+        self._served += len(reqs)
+        self._inflight.append((reqs, res.logits, rs))
+
+    def _flush(self) -> None:
+        """Attach logits/labels (+ per-request cost) and fold the telemetry
+        totals — one host transfer per round's arrays, all at drain end
+        rather than inside the dispatch loop.  Totals accumulate in float64
+        here (the arrays are on the host anyway for per-request attachment),
+        masking the zero-padded tail slots of each bucket."""
+        for reqs, logits_j, rs in self._inflight:
+            n = len(reqs)
+            logits = np.asarray(logits_j)
+            for i, r in enumerate(reqs):
+                r.logits = logits[i]
+                r.label = int(logits[i].argmax())
+            if rs is not None:
+                cycles = np.asarray(rs["cycles"])
+                latency = np.asarray(rs["latency_ns"])
+                energy = np.asarray(rs["energy_pj"])
+                for i, r in enumerate(reqs):
+                    r.cycles = int(cycles[i])
+                    r.latency_ns = float(latency[i])
+                    r.energy_pj = float(energy[i])
+                self._totals["cycles"] += float(cycles[:n].sum(dtype=np.float64))
+                self._totals["cycles_per_tile"] += np.asarray(
+                    rs["cycles_per_tile"], np.float64)[:n].sum(axis=0)
+                self._totals["latency_ns"] += float(
+                    latency[:n].sum(dtype=np.float64))
+                self._totals["energy_pj"] += float(
+                    energy[:n].sum(dtype=np.float64))
+        self._inflight.clear()
+
+    # -------------------------------------------------------------- #
+    # aggregate telemetry
+    # -------------------------------------------------------------- #
     def stats(self) -> dict:
-        """Aggregate hardware-cost telemetry over every request served with
-        ``telemetry=True`` (all counters stay zero when telemetry is off)."""
-        from repro.core.esam import cost_model as cm
+        """Aggregate hardware-cost telemetry in paper units.
 
-        n = max(1, self._served)
-        spec = cm.cell_spec(self.read_ports)
-        mean_latency_ns = self._latency_ns_total / n
-        return {
-            "requests": self._served,
+        Safe to call at any time: before anything is served it returns the
+        well-defined empty aggregate (all-zero costs, ``n_requests == 0``).
+        A pure host read — no device work: the totals were folded in exact
+        float64 at each drain flush.
+        """
+        spec = self._cm.cell_spec(self.read_ports)
+        n = self._served
+        base = {
+            "requests": n,          # legacy key
+            "n_requests": n,
             "telemetry": self.telemetry,
             "cell": spec.name,
             "read_ports": self.read_ports,
-            "cycles_mean": self._cycles_total / n,
-            "latency_ns_mean": mean_latency_ns,
-            "energy_pj_per_inf": self._energy_pj_total / n,
-            # un-pipelined device-side rate implied by the mean latency
-            "throughput_inf_s": 1e9 / mean_latency_ns if mean_latency_ns else 0.0,
+            "data_parallel": 1 if self.rules is None
+            else self.rules.axis_size("spike_batch"),
         }
-
-    def _serve_batch(self, reqs: list[SpikeRequest]):
-        spikes = np.zeros((self.batch_size, self.n_in), np.uint8)
-        for i, r in enumerate(reqs):
-            assert r.spikes.shape == (self.n_in,), (r.spikes.shape, self.n_in)
-            spikes[i] = np.asarray(r.spikes) != 0
-        packed = jnp.asarray(self._packing.pack_spikes_np(spikes))
-        if self.telemetry:
-            logits_j, counts = self._fwd_telemetry(packed)
-            logits = np.asarray(logits_j)
-        else:
-            logits = np.asarray(self._fwd(packed))
-        for i, r in enumerate(reqs):
-            r.logits = logits[i]
-            r.label = int(logits[i].argmax())
-        if self.telemetry:
-            self._attach_telemetry(reqs, counts)
-
-    def _attach_telemetry(self, reqs: list[SpikeRequest], counts):
-        from repro.core.esam import cost_model as cm
-
-        loads = [np.asarray(c, np.float64)[: len(reqs)] for c in counts]
-        rs = cm.request_stats(self.net.topology, loads, self.read_ports)
-        for i, r in enumerate(reqs):
-            r.cycles = int(rs.cycles[i])
-            r.latency_ns = float(rs.latency_ns[i])
-            r.energy_pj = float(rs.energy_pj[i])
-        self._served += len(reqs)
-        self._cycles_total += float(rs.cycles.sum())
-        self._latency_ns_total += float(rs.latency_ns.sum())
-        self._energy_pj_total += float(rs.energy_pj.sum())
+        if n == 0:
+            return {**base, "cycles_mean": 0.0, "latency_ns_mean": 0.0,
+                    "energy_pj_per_inf": 0.0, "throughput_inf_s": 0.0,
+                    "throughput_pipelined_inf_s": 0.0}
+        mean_latency_ns = self._totals["latency_ns"] / n
+        # pipelined rate: tiles overlap consecutive samples, so the slowest
+        # mean tile stage sets the cadence (same model as system_stats)
+        bottleneck_cycles = float(np.max(self._totals["cycles_per_tile"])) / n
+        return {
+            **base,
+            "cycles_mean": self._totals["cycles"] / n,
+            "latency_ns_mean": mean_latency_ns,
+            "energy_pj_per_inf": self._totals["energy_pj"] / n,
+            # un-pipelined device-side rate implied by the mean latency
+            "throughput_inf_s":
+                1e9 / mean_latency_ns if mean_latency_ns else 0.0,
+            "throughput_pipelined_inf_s":
+                1e9 / (bottleneck_cycles * spec.clock_ns)
+                if bottleneck_cycles else 0.0,
+        }

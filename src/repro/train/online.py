@@ -5,9 +5,10 @@ tiles and adapts its readout on-device through supervised stochastic STDP,
 every weight update a column access through the transposable port.  This
 driver scales that loop to real batch counts:
 
-* the frozen prefix runs ONCE through the packed fused plane
-  (``learning.last_hidden_spikes``) and is reused across every epoch — the
-  hidden tiles never learn, so their activations never change;
+* the frozen prefix runs ONCE through a compiled execution plan
+  (``EsamNetwork.plan(mode="prefix")`` — the packed fused datapath) and is
+  reused across every epoch — the hidden tiles never learn, so their
+  activations never change;
 * the last-layer bits stay transposed-resident (``{0,1}[n_out, n_in]``)
   across epochs, fed straight back into ``learning.column_event_epoch``
   whose donated carry updates them in place;
@@ -83,14 +84,23 @@ def train_online(
         raise ValueError("eval_spikes and eval_labels must be given together")
     spikes = jnp.asarray(spikes).astype(bool)
     labels = jnp.asarray(labels)
-    pre = learning.last_hidden_spikes(
-        network.weight_bits, network.vth, spikes, interpret=interpret)
+    # one compiled prefix plan, reused for train and eval splits
+    prefix_plan = network.plan(mode="prefix", interpret=interpret)
+    n_pre = network.topology[-2]
+
+    def run_prefix(x):
+        out = prefix_plan(x).prefix
+        if prefix_plan.prefix_packed:
+            from repro.core import packing
+
+            out = packing.unpack_spikes(out, n_pre, dtype=jnp.bool_)
+        return out
+
+    pre = run_prefix(spikes)
     if eval_spikes is None:
         eval_pre, eval_labels = pre, labels
     else:
-        eval_pre = learning.last_hidden_spikes(
-            network.weight_bits, network.vth,
-            jnp.asarray(eval_spikes).astype(bool), interpret=interpret)
+        eval_pre = run_prefix(jnp.asarray(eval_spikes).astype(bool))
         eval_labels = jnp.asarray(eval_labels)
 
     bits_t = jnp.asarray(network.weight_bits[-1]).T
