@@ -8,6 +8,8 @@ Emits ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   bench_comparison       Table 3         (44 MInf/s, 607 pJ/Inf, 29 mW)
   bench_accuracy         Sec 4.4.2       (BNN->SNN conversion, V3)
   bench_kernels          (TPU plane)     Pallas kernel functional timings
+  bench_temporal         (temporal plane) fused LIF scan vs naive loop,
+                                          event-stream rates, encoders
   bench_roofline         (framework)     dry-run roofline per arch x shape
 """
 
@@ -27,14 +29,15 @@ def main() -> None:
         bench_roofline,
         bench_spiking_lm,
         bench_system,
+        bench_temporal,
         bench_timing,
     )
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_circuit, bench_timing, bench_online_learning, bench_system,
-                bench_comparison, bench_accuracy, bench_kernels, bench_spiking_lm,
-                bench_roofline):
+                bench_comparison, bench_accuracy, bench_kernels, bench_temporal,
+                bench_spiking_lm, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

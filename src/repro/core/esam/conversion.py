@@ -29,17 +29,22 @@ from repro.core.esam.network import EsamNetwork
 
 def bnn_to_snn(params: list[dict]) -> EsamNetwork:
     weight_bits, vth = [], []
+    offset = None
     for i, layer in enumerate(params):
         wb = bnn_mod.sign_pm1(layer["w"])                  # {-1,+1}
         bits = ((wb + 1) // 2).astype(jnp.int8)            # {0,1} stored bits
         b = layer["b"]
-        if i == 0:
+        if i == len(params) - 1:
+            # Output tile: readout only (V_th = inf, never fires).  Its
+            # inputs are {0,1} spikes for a single-layer network (logits =
+            # W.s + b, so the offset is just b) and {-1,+1} activations
+            # otherwise (the (b - colsum)/2 fold of the module docstring).
+            theta = jnp.full((wb.shape[1],), jnp.inf)
+            offset = b if i == 0 else (b - wb.sum(axis=0)) / 2.0
+        elif i == 0:
             theta = jnp.ceil(-b)
-        elif i < len(params) - 1:
-            theta = jnp.ceil((wb.sum(axis=0) - b) / 2.0)
         else:
-            theta = jnp.full((wb.shape[1],), jnp.inf)      # output tile: readout only
-            offset = (b - wb.sum(axis=0)) / 2.0
+            theta = jnp.ceil((wb.sum(axis=0) - b) / 2.0)
         weight_bits.append(bits)
         vth.append(
             jnp.where(jnp.isinf(theta), jnp.iinfo(jnp.int32).max, theta).astype(jnp.int32)

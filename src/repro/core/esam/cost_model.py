@@ -312,6 +312,74 @@ def request_stats_device(
     }
 
 
+def temporal_request_stats(
+    topology: Sequence[int],
+    loads: Sequence[np.ndarray],   # per tile, int[B, T, n_groups] per-step loads
+    read_ports: int,
+) -> dict:
+    """Per-request hardware cost of an *event stream* (numpy, float64).
+
+    Every timestep is one full drain of the paper's pipeline — the arbiter
+    schedules that step's events, neurons accumulate, R_empty fires — so the
+    per-step cost is exactly :func:`request_stats` evaluated on that step's
+    *measured* activity (the group popcounts of the inter-step bitplanes),
+    and a stream's cost is the sum over its T steps.  Leak/reset/refractory
+    ride the existing fire-cycle and neuron-fire terms: they happen on the
+    same R_empty event, on the same membrane register.
+
+    Returns {"cycles_per_tile": f64[B, n_tiles] (summed over steps),
+    "cycles": f64[B], "latency_ns": f64[B], "energy_pj": f64[B],
+    "energy_pj_per_step": f64[B], "n_steps": T}.
+    """
+    b, t = np.asarray(loads[0]).shape[:2]
+    flat = [np.asarray(ld, np.float64).reshape(b * t, -1) for ld in loads]
+    rs = request_stats(topology, flat, read_ports)
+    n_tiles = len(topology) - 1
+    cycles_per_tile = rs.cycles_per_tile.reshape(b, t, n_tiles).sum(axis=1)
+    cycles = rs.cycles.reshape(b, t).sum(axis=1)
+    energy = rs.energy_pj.reshape(b, t).sum(axis=1)
+    return {
+        "cycles_per_tile": cycles_per_tile,
+        "cycles": cycles,
+        "latency_ns": cycles * cell_spec(read_ports).clock_ns,
+        "energy_pj": energy,
+        "energy_pj_per_step": energy / t,
+        "n_steps": t,
+    }
+
+
+def temporal_request_stats_device(
+    topology: Sequence[int],
+    loads: Sequence,      # per tile, jnp int32[B, T, n_groups] per-step loads
+    read_ports: int,
+) -> dict:
+    """:func:`temporal_request_stats` computed on-device (jnp, float32).
+
+    Same shape contract and formulas, evaluated lazily on jax arrays —
+    the event-serving plane accumulates stream telemetry device-resident
+    exactly like the static plane does with :func:`request_stats_device`
+    (float32 agrees with the float64 numpy accounting to ~1e-6 relative,
+    tested; cycle counts stay exact).
+    """
+    import jax.numpy as jnp
+
+    b, t = loads[0].shape[:2]
+    flat = [jnp.asarray(ld).reshape(b * t, -1) for ld in loads]
+    rs = request_stats_device(topology, flat, read_ports)
+    n_tiles = len(topology) - 1
+    cycles_per_tile = rs["cycles_per_tile"].reshape(b, t, n_tiles).sum(axis=1)
+    cycles = rs["cycles"].reshape(b, t).sum(axis=1)
+    energy = rs["energy_pj"].reshape(b, t).sum(axis=1)
+    return {
+        "cycles_per_tile": cycles_per_tile,
+        "cycles": cycles,
+        "latency_ns": cycles * cell_spec(read_ports).clock_ns,
+        "energy_pj": energy,
+        "energy_pj_per_step": energy / t,
+        "n_steps": t,
+    }
+
+
 def column_update_cycles(read_ports: int, rows: int = 128) -> tuple[int, int]:
     """(read_cycles, write_cycles) to read+write one weight column.
 

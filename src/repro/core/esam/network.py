@@ -31,6 +31,17 @@ ROW_GROUP = 128
 _DEPRECATION_WARNED: set[str] = set()
 
 
+def reset_deprecation_warnings() -> None:
+    """Forget which deprecated ``forward*`` wrappers have already warned.
+
+    The warn-once registry is process-global, so a test asserting that a
+    wrapper warns would otherwise depend on whether another test tripped the
+    same wrapper first.  Warning-assertion tests call this before recording
+    (tests/test_plan.py, tests/test_network_deprecations.py).
+    """
+    _DEPRECATION_WARNED.clear()
+
+
 def _warn_deprecated(name: str, instead: str) -> None:
     if name in _DEPRECATION_WARNED:
         return
@@ -81,13 +92,17 @@ class EsamNetwork:
         read_ports: int | tuple[int, ...] = 4,
         record_vmem_trace: bool = False,
         interpret: bool | None = None,
+        temporal=None,  # Optional[temporal.TemporalConfig], mode="temporal"
         rules=None,
     ) -> EsamPlan:
         """Build (or fetch from this network's cache) one compiled plan.
 
         ``rules`` takes :func:`repro.distributed.sharding.make_esam_rules`
         output to compile the plan sharded over a device mesh; plans built
-        with rules are cached by rule-object identity.
+        with rules are cached by rule-object identity.  ``mode="temporal"``
+        takes a :class:`~repro.core.esam.temporal.TemporalConfig` — each
+        (T, leak, reset, refractory, collect, telemetry) tuple compiles one
+        executable, cached like every other spec.
         """
         spec = PlanSpec(
             mode=mode,
@@ -96,6 +111,7 @@ class EsamNetwork:
             read_ports=read_ports,
             record_vmem_trace=record_vmem_trace,
             interpret=interpret,
+            temporal=temporal,
         )
         key = (spec, None if rules is None else id(rules))
         cached = self._plan_cache.get(key)

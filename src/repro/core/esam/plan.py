@@ -25,6 +25,12 @@ Modes
 ``cycle``       the rank-schedule cycle-accurate plane; with a tuple of
                 cell options in ``read_ports`` it becomes the full Fig 8
                 port sweep compiled as one executable.
+``temporal``    the multi-timestep LIF plane (``core/esam/temporal.py``):
+                one jitted membrane-resident ``lax.scan`` over a
+                ``[T, batch, n_in]`` event stream; requires a
+                :class:`~repro.core.esam.temporal.TemporalConfig`.  With
+                T=1, zero leak and zero reset it is bit-identical to
+                ``packed`` (property-tested).
 
 Orthogonal flags: ``collect`` returns the inter-tile planes, ``telemetry``
 returns the per-tile arbiter loads (group popcounts straight off the wire).
@@ -53,8 +59,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core import packing
 from repro.core.esam import arbiter as arb
 from repro.core.esam import tile as tile_mod
+from repro.core.esam import temporal as temporal_mod
 
-MODES = ("functional", "packed", "prefix", "cycle")
+MODES = ("functional", "packed", "prefix", "cycle", "temporal")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,11 +76,20 @@ class PlanSpec:
     read_ports: int | tuple[int, ...] = 4
     record_vmem_trace: bool = False
     interpret: Optional[bool] = None
+    #: temporal mode only: the LIF dynamics (T, leak, reset, refractory) —
+    #: part of the cache key, so each (T, collect, telemetry) spec compiles
+    #: exactly one executable.
+    temporal: Optional[temporal_mod.TemporalConfig] = None
 
     def __post_init__(self):
         assert self.mode in MODES, (self.mode, MODES)
         if isinstance(self.read_ports, tuple):
             assert self.mode == "cycle", "read_ports sweep needs mode='cycle'"
+        if self.mode == "temporal":
+            assert self.temporal is not None, (
+                "mode='temporal' needs a TemporalConfig")
+        else:
+            assert self.temporal is None, (self.mode, self.temporal)
 
 
 @dataclasses.dataclass
@@ -85,7 +101,10 @@ class PlanResult:
     bitplanes including the network input (``packed``) — matching what the
     legacy ``forward(collect=True)`` / ``forward_fused_packed_collect``
     returned.  ``loads`` are int32 arbiter loads per tile input,
-    ``[..., n_groups]`` — the cost model's measured activity.
+    ``[..., n_groups]`` — the cost model's measured activity.  In temporal
+    mode ``planes``/``loads`` gain a per-timestep axis after the batch:
+    ``[..., T, n_words]`` / ``[..., T, n_groups]`` (batch-first so one
+    sharding spec covers every mode).
     """
 
     logits: Optional[jax.Array] = None
@@ -167,13 +186,15 @@ class EsamPlan:
         hidden_ok = all(
             w.shape[1] % 32 == 0 for w in network.weight_bits[:-1]
         )
-        if spec.mode == "packed":
+        if spec.mode in ("packed", "temporal"):
             assert hidden_ok, (
-                "packed plan needs 32-aligned hidden widths", self.topology)
+                "packed/temporal plans need 32-aligned hidden widths",
+                self.topology)
         #: prefix mode runs packed when the hidden widths allow it, else the
         #: dense functional tiles — both bit-identical (tests/test_packing).
         self.prefix_packed = spec.mode == "prefix" and hidden_ok
-        self._packed_input = spec.mode == "packed" or self.prefix_packed
+        self._packed_input = (
+            spec.mode in ("packed", "temporal") or self.prefix_packed)
         self._n_in = self.topology[0]
         self._in_width = (
             packing.packed_width(self._n_in) if self._packed_input else self._n_in
@@ -193,8 +214,9 @@ class EsamPlan:
             assert len(col_axes) <= 1, "tile_col maps to at most one mesh axis"
             self._col_axis = col_axes[0] if col_axes else None
             col_size = rules.axis_size("tile_col")
-            if spec.mode == "cycle":
-                assert col_size == 1, "cycle plans are data-parallel only"
+            if spec.mode in ("cycle", "temporal"):
+                assert col_size == 1, (
+                    f"{spec.mode} plans are data-parallel only")
         lane = packing.LANE_BITS if self._packed_input else 1
         self._col_shard = tuple(
             self._col_axis is not None
@@ -275,6 +297,15 @@ class EsamPlan:
                         else arb.split_row_groups(pl.astype(jnp.int32)).sum(-1)
                         for pl in planes
                     )
+            elif spec.mode == "temporal":
+                # x: uint32[B, T, n_words] batch-first (shardable); the scan
+                # wants time leading, and its stacked outputs come back
+                # batch-first from temporal_forward.
+                res = temporal_mod.temporal_forward(
+                    wb, vth, off, x.swapaxes(0, 1), spec.temporal,
+                    interpret=spec.interpret,
+                    collect=spec.collect, telemetry=spec.telemetry)
+                out.update(res)
             else:  # cycle
                 rp = spec.read_ports
                 sweep = isinstance(rp, tuple)
@@ -327,10 +358,11 @@ class EsamPlan:
         params_spec = {
             "weight_bits": w_specs, "vth": v_specs, "out_offset": P(None),
         }
+        x_spec = P(ba, None, None) if self.spec.mode == "temporal" else P(ba, None)
         mapped = compat.shard_map(
             fn,
             mesh=self.rules.mesh,
-            in_specs=(params_spec, P(ba, None)),
+            in_specs=(params_spec, x_spec),
             out_specs=P(ba),
         )
         return jax.jit(mapped)
@@ -339,8 +371,29 @@ class EsamPlan:
     # execution
     # ------------------------------------------------------------------ #
     def _normalize(self, x) -> tuple[jax.Array, tuple[int, ...]]:
-        """Coerce input to a flat 2-D batch; returns (x2d, leading shape)."""
+        """Coerce input to a flat 2-D batch; returns (x2d, leading shape).
+
+        Temporal plans instead take a time-first event stream
+        ``[T, ..., n_in]`` (spikes or wire format) and flatten it to a
+        batch-first ``uint32[B, T, n_words]`` — time is never a batch axis.
+        """
         x = jnp.asarray(x)
+        if self.spec.mode == "temporal":
+            t = self.spec.temporal.n_steps
+            if x.ndim < 2 or x.shape[0] != t:
+                raise ValueError(
+                    f"temporal plan expects events[{t}, ..., n], got {x.shape}")
+            lead = x.shape[1:-1]
+            if x.dtype == jnp.uint32 and x.shape[-1] == self._in_width:
+                pass                                  # already wire format
+            elif x.shape[-1] == self._n_in:
+                x = packing.pack_spikes(x != 0)       # spikes -> wire format
+            else:
+                raise ValueError(
+                    f"expected events[{t}, ..., {self._n_in}] or packed "
+                    f"uint32[{t}, ..., {self._in_width}], got {x.shape} "
+                    f"{x.dtype}")
+            return x.reshape(t, -1, x.shape[-1]).swapaxes(0, 1), lead
         lead = x.shape[:-1]
         if self._packed_input:
             if x.dtype == jnp.uint32 and x.shape[-1] == self._in_width:
@@ -363,7 +416,7 @@ class EsamPlan:
         b = x.shape[0]
         pad = (-b) % self._dp
         if pad:
-            x = jnp.pad(x, ((0, pad), (0, 0)))
+            x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
         # weights are read from the network at call time (shapes are fixed at
         # build; values may change — e.g. a learned readout swapped in), so a
         # cached plan can never serve stale parameters

@@ -1,0 +1,262 @@
+"""Temporal event plane: multi-timestep LIF simulation with membrane-resident
+fused scan.
+
+Everything before this module was single-timestep: one spike plane in, one
+argmax out, V_mem reset every sample.  The temporal plane runs *event
+streams* — T timesteps of binary spike planes (``repro.data.events``) —
+through the same tile cascade with membrane potential persisting across
+steps, IMPULSE-style (Agrawal et al.: weights and membrane state fused in
+one CIM macro; the membrane never leaves the array between timesteps).
+
+The fused forward is a single jitted ``lax.scan`` over timesteps.  Its carry
+is the full membrane state of every tile — ``float32[B, n_out]`` V_mem plus
+an ``int32[B, n_out]`` refractory counter per hidden tile, and the output
+tile's accumulator — so state stays device-resident for the whole stream.
+Two structural optimizations ride the fused formulation:
+
+  * the first tile's MAC depends only on the input events, never on state,
+    so it is lifted out of the time loop into ONE flattened ``[T*B, n_in]``
+    MAC before the scan (far better arithmetic intensity than T small ones);
+  * the loop-invariant weight decode ({0,1} bits -> ±1 operand) happens once
+    outside the scan instead of once per step.
+
+Per-step work dispatches by backend, mirroring ``kernels/arbiter``: on TPU
+the MAC is the bit-packed Pallas kernel (``kernels/cim_matmul_packed`` —
+uint32 bitplanes on the inter-tile wire, unpack in VMEM) and the membrane
+update is the fused ``kernels/lif_step`` kernel; elsewhere the MAC unpacks
+in-jit and runs one float32 BLAS dot (exact: every operand and partial sum
+is an integer far below 2^24) and the update is the jnp reference.  Both
+paths are bit-identical on the integer datapath.
+
+``temporal_forward_naive`` is the deliberately naive per-step Python loop —
+dense per-step tiles with host-resident state and one device round-trip per
+timestep.  With ``jit_step=True`` (default) each step is one jitted call:
+the bit-identity oracle for the fused scan (tests/test_temporal.py).  With
+``jit_step=False`` every op dispatches eagerly — the true first-pass
+research implementation, and the baseline ``benchmarks/bench_temporal.py``
+records the fused speedup against (eager arithmetic is unfused, so
+agreement there is to float32 ulp once a leak is on, bitwise at zero leak).
+
+With ``n_steps=1``, ``leak=0``, ``reset="zero"`` the temporal plane is
+bit-identical to the static packed plane (property-tested): one step of
+leak-free LIF from zero state *is* the IF fire of the fused cascade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.esam import arbiter as arb
+from repro.kernels.lif_step.ref import RESET_MODES
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalConfig:
+    """Static dynamics of one temporal execution (part of the plan cache key).
+
+    n_steps:    T, the number of timesteps in the event stream.
+    leak:       fraction of V_mem lost per step (V *= 1 - leak); 0 disables
+                the leak exactly (float32 multiply by 1.0 is the identity).
+    reset:      "zero" (V_mem := 0 on fire, the paper's Sec 3.4 behaviour)
+                or "subtract" (V_mem -= V_th, carrying the residual).
+    refractory: steps a neuron stays silent after firing (0 disables).
+    """
+
+    n_steps: int
+    leak: float = 0.0
+    reset: str = "zero"
+    refractory: int = 0
+
+    def __post_init__(self):
+        assert self.n_steps >= 1, self.n_steps
+        assert 0.0 <= self.leak < 1.0, self.leak
+        assert self.reset in RESET_MODES, (self.reset, RESET_MODES)
+        assert self.refractory >= 0, self.refractory
+
+
+def init_state(topology, batch: int):
+    """Zero membrane state for one event stream: per hidden tile a
+    (vmem float32[B, n], refrac int32[B, n]) pair, plus the output tile's
+    float32[B, n_cls] accumulator."""
+    hidden = tuple(
+        (jnp.zeros((batch, n), jnp.float32), jnp.zeros((batch, n), jnp.int32))
+        for n in topology[1:-1]
+    )
+    return hidden, jnp.zeros((batch, topology[-1]), jnp.float32)
+
+
+def _mac_packed(plane, weight_bits, w_signed_f32, *, use_kernel, interpret):
+    """One tile's CIM MAC on the packed wire -> int32 contributions.
+
+    TPU: the bit-packed Pallas kernel (unpack in VMEM, MXU MAC).  Elsewhere:
+    unpack in-jit and one f32 BLAS dot against the pre-decoded ±1 operand —
+    exact integer arithmetic in float32 (|any partial sum| <= n_in << 2^24),
+    bit-identical to the kernel (tested via the plan identities).
+    """
+    if use_kernel:
+        from repro.kernels.cim_matmul_packed import ops as packed_ops
+
+        return packed_ops.cim_matmul_packed(
+            plane, weight_bits, interpret=interpret)
+    s = packing.unpack_spikes(plane, weight_bits.shape[0], jnp.float32)
+    out = jax.lax.dot_general(
+        s, w_signed_f32, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return out.astype(jnp.int32)
+
+
+def temporal_forward(
+    weight_bits,
+    vth,
+    out_offset,
+    events,                 # uint32[T, B, ceil(n_in/32)] packed event stream
+    cfg: TemporalConfig,
+    *,
+    interpret: bool | None = None,
+    use_kernel: bool | None = None,
+    collect: bool = False,
+    telemetry: bool = False,
+) -> dict:
+    """Membrane-resident fused scan over all T timesteps.
+
+    The readout integrates the last tile's contributions with the same leak
+    and never fires (argmax readout): ``logits = V_out(T) + out_offset``.
+    Per-step outputs come back batch-first — ``planes``/``loads`` are tuples
+    over tiles of ``[B, T, ...]`` — so one sharding spec covers every output.
+    """
+    from repro.kernels.lif_step import ops as lif_ops
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    t, batch, _ = events.shape
+    topology = tuple(
+        [weight_bits[0].shape[0]] + [w.shape[1] for w in weight_bits])
+    decay = jnp.float32(1.0 - cfg.leak)
+    # loop-invariant weight decode, hoisted out of the scan (DCE'd on the
+    # kernel path, which decodes its int8 bits in VMEM)
+    wf = [None if use_kernel else 2.0 * w.astype(jnp.float32) - 1.0
+          for w in weight_bits]
+
+    # tile 0's MAC sees only the events — lift it out of the time loop as
+    # one flattened [T*B, n_in] MAC (the layer-stationary move)
+    c_in = _mac_packed(
+        events.reshape(t * batch, -1), weight_bits[0], wf[0],
+        use_kernel=use_kernel, interpret=interpret,
+    ).reshape(t, batch, topology[1])
+
+    def step(state, c_t):
+        hidden, out_v = state
+        contrib = c_t
+        new_hidden, planes, loads = [], [], []
+        for i, ((v, r), th) in enumerate(zip(hidden, vth[:-1])):
+            spikes, v, r = lif_ops.lif_step(
+                v, contrib, th, r,
+                leak=cfg.leak, reset=cfg.reset, refractory=cfg.refractory,
+                use_kernel=use_kernel, interpret=interpret)
+            new_hidden.append((v, r))
+            if use_kernel or collect:
+                # the packed inter-tile wire (and the collected plane)
+                p = packing.pack_spikes(spikes)
+                planes.append(p)
+            if use_kernel:
+                contrib = _mac_packed(
+                    p, weight_bits[i + 1], wf[i + 1],
+                    use_kernel=True, interpret=interpret)
+            else:
+                # ref path: the spikes just fired in this buffer — feed the
+                # f32 dot directly instead of a pack->unpack round-trip
+                sf = spikes.astype(jnp.float32)
+                contrib = jax.lax.dot_general(
+                    sf, wf[i + 1], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32).astype(jnp.int32)
+            if telemetry:
+                loads.append(
+                    packing.group_popcount(planes[-1]) if (use_kernel or collect)
+                    else arb.split_row_groups(
+                        spikes.astype(jnp.int32)).sum(-1))
+        out_v = out_v * decay + contrib.astype(jnp.float32)
+        ys = {}
+        if collect:
+            ys["planes"] = tuple(planes)
+        if telemetry:
+            ys["loads"] = tuple(loads)
+        return (tuple(new_hidden), out_v), ys
+
+    (_, out_v), ys = jax.lax.scan(step, init_state(topology, batch), c_in)
+    out: dict = {"logits": out_v + out_offset}
+    # scan stacks per-step outputs time-first; move batch first for sharding.
+    # tile 0's plane is the input stream itself (its MAC left the loop).
+    ev_bf = events.swapaxes(0, 1)
+    if collect:
+        out["planes"] = (ev_bf,) + tuple(
+            p.swapaxes(0, 1) for p in ys["planes"])
+    if telemetry:
+        out["loads"] = (packing.group_popcount(ev_bf),) + tuple(
+            ld.swapaxes(0, 1) for ld in ys["loads"])
+    return out
+
+
+# --------------------------------------------------------------------- #
+# naive per-step baseline (and bit-identity oracle)
+# --------------------------------------------------------------------- #
+def _naive_step_body(weight_bits, vth, hidden, out_v, spikes,
+                     *, leak, reset, refractory):
+    from repro.kernels.lif_step.ref import lif_step_ref
+
+    s = spikes.astype(jnp.int32)
+    new_hidden = []
+    for (v, r), w, th in zip(hidden, weight_bits[:-1], vth[:-1]):
+        contrib = s @ (2 * w.astype(jnp.int32) - 1)
+        s8, v, r = lif_step_ref(
+            v, contrib, th, r, leak=leak, reset=reset, refractory=refractory)
+        new_hidden.append((v, r))
+        s = s8.astype(jnp.int32)
+    out_contrib = s @ (2 * weight_bits[-1].astype(jnp.int32) - 1)
+    out_v = out_v * jnp.float32(1.0 - leak) + out_contrib.astype(jnp.float32)
+    return tuple(new_hidden), out_v
+
+
+_naive_step_jit = jax.jit(
+    _naive_step_body, static_argnames=("leak", "reset", "refractory"))
+
+
+def temporal_forward_naive(network, events: np.ndarray, cfg: TemporalConfig,
+                           *, jit_step: bool = True) -> np.ndarray:
+    """The naive implementation: a host Python loop over timesteps.
+
+    ``events``: {0,1}[T, B, n_in] *unpacked* — each step runs dense int32
+    tiles on an int8 spike tensor, and the whole membrane state makes a
+    device->host round-trip per timestep (``np.asarray``), the way a
+    reference SNN loop inspects per-step activity.
+
+    ``jit_step=True`` (default) compiles the per-step body once: the exact
+    integer datapath of the fused scan, so logits are bit-identical — the
+    oracle in tests/test_temporal.py.  ``jit_step=False`` dispatches every
+    op eagerly — the true naive first implementation and the speedup
+    baseline of benchmarks/bench_temporal.py (eager arithmetic is unfused,
+    so with a nonzero leak it agrees with the fused scan to float32 ulp
+    rather than bitwise).
+    """
+    events = np.asarray(events)
+    assert events.ndim == 3 and events.shape[0] == cfg.n_steps, events.shape
+    batch = events.shape[1]
+    wb = tuple(network.weight_bits)
+    vth = tuple(network.vth)
+    hidden, out_v = init_state(network.topology, batch)
+    hidden = tuple((np.asarray(v), np.asarray(r)) for v, r in hidden)
+    out_v = np.asarray(out_v)
+    step = _naive_step_jit if jit_step else _naive_step_body
+    for t in range(cfg.n_steps):
+        hidden_j, out_j = step(
+            wb, vth,
+            tuple((jnp.asarray(v), jnp.asarray(r)) for v, r in hidden),
+            jnp.asarray(out_v), jnp.asarray(events[t], jnp.int8),
+            leak=cfg.leak, reset=cfg.reset, refractory=cfg.refractory)
+        hidden = tuple((np.asarray(v), np.asarray(r)) for v, r in hidden_j)
+        out_v = np.asarray(out_j)
+    return out_v + np.asarray(network.out_offset)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the LIF-step kernel.
+
+``lif_step`` is the dispatch point the temporal plane
+(``core.esam.temporal``) consumes: the fused Pallas kernel on TPU, the jnp
+reference elsewhere (an elementwise kernel gains nothing in interpret mode
+on CPU, and the two are bit-identical — tested), mirroring the
+``kernels/arbiter`` dispatch convention.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.lif_step.kernel import lif_step as lif_step_kernel
+from repro.kernels.lif_step.ref import RESET_MODES, lif_step_ref
+
+
+def lif_step(
+    vmem: jax.Array,
+    contrib: jax.Array,
+    vth: jax.Array,
+    refrac: jax.Array,
+    *,
+    leak: float = 0.0,
+    reset: str = "zero",
+    refractory: int = 0,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    """One leak-integrate-fire-reset step — see ``lif_step_ref``.
+
+    ``use_kernel=None`` (default) runs the fused Pallas kernel only when the
+    backend compiles it natively (TPU); pass True/False to force either path.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return lif_step_kernel(
+            vmem, contrib, vth, refrac,
+            leak=leak, reset=reset, refractory=refractory,
+            interpret=interpret)
+    return lif_step_ref(
+        vmem, contrib, vth, refrac,
+        leak=leak, reset=reset, refractory=refractory)
+
+
+__all__ = ["RESET_MODES", "lif_step", "lif_step_kernel", "lif_step_ref"]

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the LIF-step kernel: leak-integrate-fire-reset on
+resident membrane state.
+
+Semantics (one SNN timestep for one tile's neuron array):
+
+    v      = vmem * (1 - leak) + contrib          # leak, then integrate
+    fired  = (v >= vth) & (refrac == 0)           # refractory gates the fire
+    v'     = 0            where fired (reset="zero")
+             v - vth      where fired (reset="subtract")
+             v            elsewhere
+    refrac'= refractory   where fired, else max(refrac - 1, 0)
+
+V_mem is float32 (the leak multiply needs it); contributions are the int32
+CIM MAC outputs, which float32 holds exactly for every reachable magnitude
+(|contrib| <= n_in < 2^24), so with ``leak=0`` the datapath is bit-exact
+integer arithmetic — the T=1 identity with the static packed plane rests on
+this (tests/test_temporal.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RESET_MODES = ("zero", "subtract")
+
+
+def lif_step_ref(
+    vmem: jax.Array,       # float32[B, N] resident membrane state
+    contrib: jax.Array,    # int32[B, N] this step's CIM MAC contribution
+    vth: jax.Array,        # int32[N] per-neuron thresholds
+    refrac: jax.Array,     # int32[B, N] remaining refractory steps
+    *,
+    leak: float = 0.0,
+    reset: str = "zero",
+    refractory: int = 0,
+):
+    """Returns (spikes int8[B, N], vmem' float32[B, N], refrac' int32[B, N])."""
+    assert reset in RESET_MODES, (reset, RESET_MODES)
+    th = vth[None, :].astype(jnp.float32)
+    v = vmem * jnp.float32(1.0 - leak) + contrib.astype(jnp.float32)
+    fired = (v >= th) & (refrac == 0)
+    if reset == "zero":
+        v_next = jnp.where(fired, jnp.float32(0.0), v)
+    else:
+        v_next = jnp.where(fired, v - th, v)
+    refrac_next = jnp.where(
+        fired, jnp.int32(refractory), jnp.maximum(refrac - 1, 0))
+    return fired.astype(jnp.int8), v_next, refrac_next

@@ -107,21 +107,82 @@ def _esam_main(args):
     assert all(l is not None for l in labels)
 
 
+def _events_main(args):
+    """Synthetic event-stream traffic through the temporal plan: mixed-T
+    rate-encoded digit streams drain via ``SpikeEngine.submit_events``
+    ((batch, T)-bucketed rounds), printing spikes/s next to the modeled
+    pJ/timestep from the measured per-step activity."""
+    from repro.core.esam import cost_model as cm
+    from repro.core.esam.temporal import TemporalConfig
+    from repro.data import events as events_mod
+    from repro.serve.engine import EventRequest, SpikeEngine
+
+    topology = (768, 256, 10) if args.smoke else cm.PAPER_TOPOLOGY
+    t_mix = (2, 4) if args.smoke else (4, 8, 16)
+    n_requests = args.requests if args.requests is not None else (
+        32 if args.smoke else 256)
+    max_batch = 64 if args.batch_size is None else args.batch_size
+    net = _random_esam_network(topology, args.seed)
+    cfg = TemporalConfig(n_steps=1, leak=args.leak)
+    engine_kw = dict(max_batch=max_batch, telemetry=True,
+                     read_ports=args.read_ports, temporal=cfg)
+
+    def make_requests():
+        reqs, rng = [], np.random.default_rng(args.seed)
+        for i, t in enumerate(rng.choice(t_mix, size=n_requests)):
+            ev, _ = events_mod.encode_digit_events(
+                1, int(t), encoder="rate", seed=args.seed + i, gain=0.7,
+                packed=True)
+            reqs.append(EventRequest(events=ev[:, 0]))
+        return reqs
+
+    # warm a throwaway engine on the same workload shape (plans are cached
+    # per network) so the timed engine's stats() see only the timed requests
+    SpikeEngine(net, **engine_kw).serve(make_requests())
+    eng = SpikeEngine(net, **engine_kw)
+    reqs = make_requests()
+    t0 = time.perf_counter()
+    eng.serve(reqs)
+    wall_s = time.perf_counter() - t0
+
+    st = eng.stats()
+    n_spikes = sum(
+        int(np.bitwise_count(np.asarray(r.events)).sum()) for r in reqs)
+    print(f"esam-events: {st['n_event_requests']} streams, "
+          f"{st['timesteps_total']} timesteps (T mix {tuple(t_mix)}, "
+          f"cell={st['cell']})")
+    print(f"  wall-clock        : {wall_s*1e3:8.1f} ms  "
+          f"({st['timesteps_total']/wall_s:,.0f} steps/s, "
+          f"{n_spikes/wall_s:,.0f} spikes/s)")
+    print(f"  model energy      : {st['energy_pj_per_timestep']:8.1f} "
+          f"pJ/timestep ({st['event_energy_pj_mean']:.1f} pJ/stream)")
+    print(f"  model latency     : {st['event_latency_ns_mean']:8.1f} "
+          f"ns/stream ({st['event_cycles_mean']:.1f} cycles)")
+    assert all(r.label is not None for r in reqs)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--esam", action="store_true",
                     help="serve ESAM spike traffic through the sharded plan")
+    ap.add_argument("--events", action="store_true",
+                    help="serve ESAM event-stream traffic (temporal plan)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=None,
-                    help="default: 4 (LM), 64 (--esam --smoke), 512 (--esam)")
+                    help="default: 4 (LM), 64 (--esam --smoke), 512 (--esam), "
+                         "32 (--events --smoke), 256 (--events)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch-size", type=int, default=None,
                     help="default: 4 (LM), 128 (--esam max_batch)")
     ap.add_argument("--read-ports", type=int, default=4)
+    ap.add_argument("--leak", type=float, default=0.125,
+                    help="--events: LIF leak per timestep")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    if args.esam:
+    if args.events:
+        _events_main(args)
+    elif args.esam:
         _esam_main(args)
     else:
         _lm_main(args)

@@ -9,7 +9,11 @@ requests are bit-packed host-side into the uint32 wire format (32 spikes per
 lane word, the paper's parallel-pulse inter-tile bus) and continuously
 batched through ONE compiled ``EsamPlan`` (optionally ``shard_map``-ped over
 a device mesh), so neither the server->device transfer nor the tile cascade
-ever materializes an unpacked spike tensor in HBM.
+ever materializes an unpacked spike tensor in HBM.  Beyond single-shot
+``SpikeRequest``s it admits event *streams* (``EventRequest``,
+``submit_events``): T timesteps of spike planes with per-request T, bucketed
+on (batch, T) and drained through the membrane-resident temporal plan
+(``mode="temporal"``) with the same device-resident telemetry discipline.
 """
 
 from __future__ import annotations
@@ -117,6 +121,30 @@ class SpikeRequest:
     energy_pj: Optional[float] = None      # per-inference energy (pJ/inf)
 
 
+@dataclasses.dataclass
+class EventRequest:
+    """An event-stream classification request: T timesteps of spike planes.
+
+    ``events``: {0,1}[T, n_in] (any dtype), or pre-packed wire-format
+    uint32[T, ceil(n_in/32)].  T may differ per request — the engine buckets
+    event rounds on (batch, T).
+    """
+
+    events: np.ndarray
+    # filled by the engine:
+    logits: Optional[np.ndarray] = None    # float32[n_classes]
+    label: Optional[int] = None            # argmax readout
+    # filled when the engine runs with telemetry (paper-unit hardware cost):
+    cycles: Optional[int] = None           # CIM cycles, summed over T steps
+    latency_ns: Optional[float] = None     # cycles * cell clock period
+    energy_pj: Optional[float] = None      # whole-stream energy
+    energy_pj_per_step: Optional[float] = None  # energy_pj / T
+
+    @property
+    def n_steps(self) -> int:
+        return int(np.asarray(self.events).shape[0])
+
+
 def _bucket_sizes(max_batch: int, min_bucket: int, dp: int) -> list[int]:
     """Power-of-two bucket ladder: min_bucket, 2*min_bucket, ... >= max_batch.
 
@@ -164,10 +192,12 @@ class SpikeEngine:
     def __init__(self, net, *, max_batch: int = 128, min_bucket: int = 8,
                  interpret: Optional[bool] = None,
                  telemetry: bool = False, read_ports: int = 4,
+                 temporal=None,  # Optional[temporal.TemporalConfig]
                  rules: Optional[shd.ShardingRules] = None,
                  batch_size: Optional[int] = None):
         from repro.core import packing
         from repro.core.esam import cost_model as cm
+        from repro.core.esam import temporal as temporal_mod
 
         if batch_size is not None:   # deprecated alias (pre-plan engine)
             max_batch = batch_size
@@ -179,20 +209,34 @@ class SpikeEngine:
         self.rules = rules
         self._packing = packing
         self._cm = cm
+        self._interpret = interpret
+        # LIF dynamics template for event-stream requests; n_steps is taken
+        # from each request (per-request T), the rest from this config.  The
+        # default (zero leak, zero reset) makes a T=1 event request
+        # bit-identical to the static packed path.
+        self._temporal = temporal or temporal_mod.TemporalConfig(n_steps=1)
         dp = 1 if rules is None else rules.axis_size("spike_batch")
         self._buckets = _bucket_sizes(max_batch, min_bucket, dp)
         self._plan = net.plan(
             mode="packed", telemetry=telemetry, interpret=interpret,
             rules=rules)
         n_tiles = len(net.topology) - 1
-        # admission queue + per-round device results awaiting one host flush
+        # admission queues + per-round device results awaiting one host flush
         self._pending: list[SpikeRequest] = []
-        self._inflight: list[tuple[list[SpikeRequest], jax.Array, Optional[dict]]] = []
+        self._pending_events: list[EventRequest] = []
+        self._inflight: list[tuple[list, jax.Array, Optional[dict]]] = []
         # exact float64 telemetry totals, folded in at each drain flush
         self._served = 0
+        self._served_events = 0
+        self._served_timesteps = 0
         self._totals = {
             "cycles": 0.0,
             "cycles_per_tile": np.zeros((n_tiles,), np.float64),
+            "latency_ns": 0.0,
+            "energy_pj": 0.0,
+        }
+        self._event_totals = {
+            "cycles": 0.0,
             "latency_ns": 0.0,
             "energy_pj": 0.0,
         }
@@ -201,13 +245,27 @@ class SpikeEngine:
     # admission + dispatch
     # -------------------------------------------------------------- #
     def submit(self, requests) -> None:
-        """Queue requests without dispatching (single request or list)."""
-        if isinstance(requests, SpikeRequest):
-            requests = [requests]
-        self._pending.extend(requests)
+        """Queue requests without dispatching (single request or list).
 
-    def serve(self, requests=None) -> list[SpikeRequest]:
-        """Enqueue ``requests`` (optional), drain the queue, flush results.
+        ``SpikeRequest`` and ``EventRequest`` objects may be mixed; each is
+        routed to its own admission queue."""
+        if isinstance(requests, (SpikeRequest, EventRequest)):
+            requests = [requests]
+        for r in requests:
+            if isinstance(r, EventRequest):
+                self._pending_events.append(r)
+            else:
+                self._pending.append(r)
+
+    def submit_events(self, requests) -> None:
+        """Queue event-stream requests (single ``EventRequest`` or list)."""
+        if isinstance(requests, EventRequest):
+            requests = [requests]
+        assert all(isinstance(r, EventRequest) for r in requests)
+        self._pending_events.extend(requests)
+
+    def serve(self, requests=None) -> list:
+        """Enqueue ``requests`` (optional), drain both queues, flush results.
 
         Returns the list of requests served in this call (the passed-in list
         when given, else everything that was pending)."""
@@ -215,11 +273,23 @@ class SpikeEngine:
             self.submit(requests)
             out = requests if isinstance(requests, list) else [requests]
         else:
-            out = list(self._pending)
+            out = list(self._pending) + list(self._pending_events)
         while self._pending:
             round_reqs = self._pending[: self.max_batch]
             del self._pending[: self.max_batch]
             self._dispatch(round_reqs)
+        while self._pending_events:
+            # one continuous-batching round per (batch, T) bucket: take the
+            # head request's T and everything sharing it, in arrival order
+            t = self._pending_events[0].n_steps
+            round_reqs, rest = [], []
+            for r in self._pending_events:
+                if r.n_steps == t and len(round_reqs) < self.max_batch:
+                    round_reqs.append(r)
+                else:
+                    rest.append(r)
+            self._pending_events = rest
+            self._dispatch_events(round_reqs, t)
         self._flush()
         return out
 
@@ -244,6 +314,34 @@ class SpikeEngine:
         self._served += len(reqs)
         self._inflight.append((reqs, res.logits, rs))
 
+    def _dispatch_events(self, reqs: list[EventRequest], n_steps: int) -> None:
+        """One event round: same-T requests padded to a batch bucket and run
+        through the temporal plan (compiled once per (batch, T) shape); the
+        stream cost stays device-side like the static path's."""
+        bucket = self._bucket(len(reqs))
+        width = self._packing.packed_width(self.n_in)
+        packed = np.zeros((n_steps, bucket, width), np.uint32)
+        for i, r in enumerate(reqs):
+            ev = np.asarray(r.events)
+            assert ev.shape[0] == n_steps, (ev.shape, n_steps)
+            if ev.dtype == np.uint32 and ev.shape[-1] == width:
+                packed[:, i] = ev
+            else:
+                assert ev.shape == (n_steps, self.n_in), (ev.shape, self.n_in)
+                packed[:, i] = self._packing.pack_spikes_np(ev != 0)
+        cfg = dataclasses.replace(self._temporal, n_steps=n_steps)
+        plan = self.net.plan(
+            mode="temporal", temporal=cfg, telemetry=self.telemetry,
+            interpret=self._interpret, rules=self.rules)
+        res = plan(jnp.asarray(packed))
+        rs = None
+        if self.telemetry:
+            rs = self._cm.temporal_request_stats_device(
+                self.net.topology, res.loads, self.read_ports)
+        self._served_events += len(reqs)
+        self._served_timesteps += len(reqs) * n_steps
+        self._inflight.append((reqs, res.logits, rs))
+
     def _flush(self) -> None:
         """Attach logits/labels (+ per-request cost) and fold the telemetry
         totals — one host transfer per round's arrays, all at drain end
@@ -252,6 +350,7 @@ class SpikeEngine:
         masking the zero-padded tail slots of each bucket."""
         for reqs, logits_j, rs in self._inflight:
             n = len(reqs)
+            is_event = bool(reqs) and isinstance(reqs[0], EventRequest)
             logits = np.asarray(logits_j)
             for i, r in enumerate(reqs):
                 r.logits = logits[i]
@@ -264,13 +363,20 @@ class SpikeEngine:
                     r.cycles = int(cycles[i])
                     r.latency_ns = float(latency[i])
                     r.energy_pj = float(energy[i])
-                self._totals["cycles"] += float(cycles[:n].sum(dtype=np.float64))
-                self._totals["cycles_per_tile"] += np.asarray(
-                    rs["cycles_per_tile"], np.float64)[:n].sum(axis=0)
-                self._totals["latency_ns"] += float(
-                    latency[:n].sum(dtype=np.float64))
-                self._totals["energy_pj"] += float(
-                    energy[:n].sum(dtype=np.float64))
+                if is_event:
+                    per_step = np.asarray(rs["energy_pj_per_step"])
+                    for i, r in enumerate(reqs):
+                        r.energy_pj_per_step = float(per_step[i])
+                    tot = self._event_totals
+                else:
+                    # static pipeline: per-tile stage totals feed the
+                    # pipelined-throughput bottleneck model
+                    self._totals["cycles_per_tile"] += np.asarray(
+                        rs["cycles_per_tile"], np.float64)[:n].sum(axis=0)
+                    tot = self._totals
+                tot["cycles"] += float(cycles[:n].sum(dtype=np.float64))
+                tot["latency_ns"] += float(latency[:n].sum(dtype=np.float64))
+                tot["energy_pj"] += float(energy[:n].sum(dtype=np.float64))
         self._inflight.clear()
 
     # -------------------------------------------------------------- #
@@ -286,6 +392,8 @@ class SpikeEngine:
         """
         spec = self._cm.cell_spec(self.read_ports)
         n = self._served
+        ne, nt = self._served_events, self._served_timesteps
+        et = self._event_totals
         base = {
             "requests": n,          # legacy key
             "n_requests": n,
@@ -294,6 +402,13 @@ class SpikeEngine:
             "read_ports": self.read_ports,
             "data_parallel": 1 if self.rules is None
             else self.rules.axis_size("spike_batch"),
+            # event-stream aggregates (temporal plane)
+            "n_event_requests": ne,
+            "timesteps_total": nt,
+            "event_energy_pj_mean": et["energy_pj"] / ne if ne else 0.0,
+            "event_latency_ns_mean": et["latency_ns"] / ne if ne else 0.0,
+            "event_cycles_mean": et["cycles"] / ne if ne else 0.0,
+            "energy_pj_per_timestep": et["energy_pj"] / nt if nt else 0.0,
         }
         if n == 0:
             return {**base, "cycles_mean": 0.0, "latency_ns_mean": 0.0,

@@ -67,3 +67,25 @@ def test_paper_topology_trains_and_converts():
     pred = net.forward(jnp.asarray(x[:512]).astype(bool)).argmax(-1)
     snn_acc = float((pred == jnp.asarray(y[:512])).mean())
     assert snn_acc > 0.8
+
+
+def test_single_layer_conversion_regression():
+    """A 1-tile BNN converts without UnboundLocalError: the only tile is the
+    readout tile, its inputs are {0,1} spikes, so offset = b exactly and the
+    SNN scores are the BNN logits up to the positive 1/sqrt(fan_in) scale."""
+    key = jax.random.PRNGKey(7)
+    params = [{
+        "w": jax.random.normal(key, (32, 10), jnp.float32),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (10,)),
+    }]
+    net = conversion.bnn_to_snn(params)          # raised UnboundLocalError
+    assert net.topology == (32, 10)
+    np.testing.assert_array_equal(np.asarray(net.out_offset),
+                                  np.asarray(params[0]["b"]))
+    x = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (64, 32))
+    scores = np.asarray(net.plan(mode="functional")(x).logits)
+    want = np.asarray(x.astype(jnp.float32) @ bnn.sign_pm1(params[0]["w"])
+                      + params[0]["b"])
+    np.testing.assert_allclose(scores, want, rtol=0, atol=1e-5)
+    np.testing.assert_array_equal(
+        scores.argmax(-1), np.asarray(bnn.forward(params, x.astype(jnp.float32)).argmax(-1)))

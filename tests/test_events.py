@@ -1,0 +1,101 @@
+"""Event encoders (``repro.data.events``): determinism, coding semantics,
+and wire-format packing — including widths that are not multiples of 32."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.data import events
+
+
+def test_rate_encode_deterministic_in_seed():
+    frames = np.random.default_rng(0).random((5, 40))
+    a = events.rate_encode(frames, 6, seed=3)
+    b = events.rate_encode(frames, 6, seed=3)
+    np.testing.assert_array_equal(a, b)
+    c = events.rate_encode(frames, 6, seed=4)
+    assert not np.array_equal(a, c)
+    assert a.shape == (6, 5, 40) and a.dtype == np.uint8
+
+
+def test_rate_encode_extremes_and_gain():
+    frames = np.array([[0.0, 1.0, 2.0]])
+    ev = events.rate_encode(frames, 8, seed=0)
+    np.testing.assert_array_equal(ev[:, 0, 0], 0)     # p=0 never fires
+    np.testing.assert_array_equal(ev[:, 0, 1:], 1)    # p>=1 clips, always fires
+    np.testing.assert_array_equal(
+        events.rate_encode(frames, 8, seed=0, gain=0.0), 0)
+
+
+def test_latency_encode_single_spike_timing():
+    frames = np.array([[1.0, 0.5, 0.0, 1e-4]])
+    ev = events.latency_encode(frames, 5)
+    counts = ev.sum(axis=0)[0]
+    np.testing.assert_array_equal(counts, [1, 1, 0, 0])   # <=1 spike per wire
+    assert ev[0, 0, 0] == 1                 # x=1 fires first...
+    assert ev[2, 0, 1] == 1                 # ...x=0.5 mid-window
+    # stronger intensity never fires later than weaker
+    t = np.argmax(ev[:, 0, :2], axis=0)
+    assert t[0] <= t[1]
+    # deterministic, no RNG at all
+    np.testing.assert_array_equal(ev, events.latency_encode(frames, 5))
+
+
+def test_delta_encode_change_detection():
+    seq = np.zeros((4, 1, 3), np.float64)
+    seq[0] = [[0.5, 0.0, 0.05]]
+    seq[1] = [[0.5, 0.3, 0.05]]             # pixel 1 changes
+    seq[2] = [[0.1, 0.3, 0.05]]             # pixel 0 changes
+    seq[3] = seq[2]                         # nothing changes
+    ev = events.delta_encode(seq, threshold=0.1)
+    np.testing.assert_array_equal(ev[0, 0], [1, 0, 0])   # vs implicit zero frame
+    np.testing.assert_array_equal(ev[1, 0], [0, 1, 0])
+    np.testing.assert_array_equal(ev[2, 0], [1, 0, 0])
+    np.testing.assert_array_equal(ev[3, 0], [0, 0, 0])
+
+
+def test_encode_dispatch_and_unknown_encoder():
+    frames = np.random.default_rng(1).random((3, 20))
+    np.testing.assert_array_equal(
+        events.encode(frames, 4, encoder="rate", seed=7),
+        events.rate_encode(frames, 4, seed=7))
+    np.testing.assert_array_equal(
+        events.encode(frames, 4, encoder="latency"),
+        events.latency_encode(frames, 4))
+    # delta on a static frame: one initial burst, then silence
+    ev = events.encode(frames, 4, encoder="delta", threshold=0.5)
+    np.testing.assert_array_equal(ev[0], frames >= 0.5)
+    np.testing.assert_array_equal(ev[1:], 0)
+    with pytest.raises(ValueError):
+        events.encode(frames, 4, encoder="nope")
+
+
+@pytest.mark.parametrize("n_in", [50, 96, 100, 768])
+def test_pack_events_arbitrary_widths_roundtrip(n_in):
+    """Packing event tensors whose n_in is not a multiple of 32 is exact:
+    the tail bits are silent and unpack restores the stream bit for bit."""
+    ev = events.rate_encode(
+        np.random.default_rng(n_in).random((4, n_in)), 3, seed=0)
+    packed = events.pack_events(ev)
+    assert packed.shape == (3, 4, packing.packed_width(n_in))
+    assert packed.dtype == np.uint32
+    np.testing.assert_array_equal(
+        packing.unpack_spikes_np(packed, n_in, np.uint8), ev)
+    if n_in % 32:
+        # tail padding is all-zero ("silent"), never spurious spikes
+        tail_bits = packed[..., -1] >> (n_in % 32)
+        np.testing.assert_array_equal(tail_bits, 0)
+
+
+def test_encode_digit_events_deterministic_and_packed():
+    ev1, y1 = events.encode_digit_events(6, 4, encoder="rate", seed=5)
+    ev2, y2 = events.encode_digit_events(6, 4, encoder="rate", seed=5)
+    np.testing.assert_array_equal(ev1, ev2)
+    np.testing.assert_array_equal(y1, y2)
+    assert ev1.shape == (4, 6, 768)
+    evp, yp = events.encode_digit_events(6, 4, encoder="rate", seed=5,
+                                         packed=True)
+    np.testing.assert_array_equal(yp, y1)
+    np.testing.assert_array_equal(evp, events.pack_events(ev1))

@@ -201,7 +201,7 @@ def test_legacy_wrappers_delegate_and_warn():
     net = _rand_net(jax.random.PRNGKey(51), (256, 128, 10))
     s = jax.random.bernoulli(jax.random.PRNGKey(10), 0.4, (4, 256))
     want, per_layer = _oracle_functional(net, s)
-    network_mod._DEPRECATION_WARNED.clear()
+    network_mod.reset_deprecation_warnings()
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         np.testing.assert_array_equal(np.asarray(net.forward(s)), np.asarray(want))
@@ -313,6 +313,19 @@ for p in (0, 4):
         np.testing.assert_array_equal(np.asarray(ta.cycles), np.asarray(tb.cycles))
         np.testing.assert_array_equal(
             np.asarray(ta.grants_per_cycle), np.asarray(tb.grants_per_cycle))
+
+# temporal plan, data-parallel: bit-identical to single device
+from repro.core.esam.temporal import TemporalConfig
+tcfg = TemporalConfig(n_steps=3, leak=0.25, reset="subtract")
+ev = jax.random.bernoulli(jax.random.fold_in(key, 8), 0.3, (3, 37, 768))
+t_single = net.plan(mode="temporal", temporal=tcfg, telemetry=True,
+                    interpret=True)(ev)
+t_dp = net.plan(mode="temporal", temporal=tcfg, telemetry=True,
+                interpret=True, rules=dp_rules)(ev)
+np.testing.assert_array_equal(np.asarray(t_dp.logits),
+                              np.asarray(t_single.logits))
+for a, b in zip(t_dp.loads, t_single.loads):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 # serving engine through the sharded plan
 from repro.serve.engine import SpikeEngine, SpikeRequest

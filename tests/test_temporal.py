@@ -1,0 +1,332 @@
+"""Temporal event plane: LIF-step kernel, membrane-resident fused scan,
+``mode="temporal"`` plans, temporal cost model, and event-stream serving.
+
+The two pillars:
+  * the fused scan is bit-identical to the naive per-step loop (the oracle
+    ``temporal.temporal_forward_naive``), across leak / reset / refractory;
+  * a T=1, zero-leak, zero-reset temporal plan is bit-identical to the
+    static ``packed`` plan (property-tested — the acceptance criterion).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import packing
+from repro.core.esam import cost_model as cm
+from repro.core.esam.network import EsamNetwork
+from repro.core.esam.temporal import (
+    TemporalConfig,
+    temporal_forward_naive,
+)
+from repro.kernels.lif_step.kernel import lif_step as lif_step_kernel
+from repro.kernels.lif_step.ops import lif_step
+from repro.kernels.lif_step.ref import lif_step_ref
+
+
+def _rand_net(key, topo):
+    bits, vth = [], []
+    for i in range(len(topo) - 1):
+        k = jax.random.fold_in(key, i)
+        bits.append(jax.random.bernoulli(
+            k, 0.5, (topo[i], topo[i + 1])).astype(jnp.int8))
+        vth.append(jax.random.randint(
+            jax.random.fold_in(k, 1), (topo[i + 1],), -10, 10, jnp.int32))
+    off = jax.random.normal(jax.random.fold_in(key, 99), (topo[-1],))
+    return EsamNetwork(weight_bits=bits, vth=vth, out_offset=off)
+
+
+def _rand_events(key, n_steps, batch, n_in, rate=0.3):
+    return np.asarray(
+        jax.random.bernoulli(key, rate, (n_steps, batch, n_in))
+    ).astype(np.uint8)
+
+
+# ----------------------------------------------------------------------- #
+# lif_step: Pallas kernel vs jnp reference
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("leak", [0.0, 0.25])
+@pytest.mark.parametrize("reset", ["zero", "subtract"])
+@pytest.mark.parametrize("refractory", [0, 2])
+def test_lif_step_kernel_matches_ref(leak, reset, refractory):
+    seed = {"zero": 0, "subtract": 100}[reset] + refractory
+    key = jax.random.PRNGKey(seed)
+    B, N = 8, 256
+    vmem = jax.random.uniform(key, (B, N), jnp.float32, -20.0, 20.0)
+    contrib = jax.random.randint(
+        jax.random.fold_in(key, 1), (B, N), -16, 17, jnp.int32)
+    vth = jax.random.randint(jax.random.fold_in(key, 2), (N,), -5, 6, jnp.int32)
+    refrac = jax.random.randint(
+        jax.random.fold_in(key, 3), (B, N), 0, refractory + 1, jnp.int32)
+    kw = dict(leak=leak, reset=reset, refractory=refractory)
+    s_r, v_r, r_r = lif_step_ref(vmem, contrib, vth, refrac, **kw)
+    s_k, v_k, r_k = lif_step_kernel(
+        vmem, contrib, vth, refrac, interpret=True, **kw)
+    if leak == 0.0:
+        # integer datapath: bit-identical on every backend
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+    else:
+        # nonzero leak: the compiler may FMA-contract mul+add (one rounding
+        # vs the ref's two) — agreement is to float32 ulp, not bitwise
+        np.testing.assert_allclose(
+            np.asarray(v_k), np.asarray(v_r), rtol=1e-6, atol=1e-4)
+        agree = np.asarray(s_k) == np.asarray(s_r)
+        assert agree.mean() > 0.99          # flips only at exact-threshold ulp
+        np.testing.assert_array_equal(
+            np.asarray(r_k)[agree], np.asarray(r_r)[agree])
+    if leak == 0.0:
+        np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+    # the ops dispatch point returns one of the two paths (ref off-TPU)
+    s_d, v_d, r_d = lif_step(vmem, contrib, vth, refrac,
+                             interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(s_d), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(v_d), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(r_d), np.asarray(r_r))
+
+
+def test_lif_step_semantics_hand_example():
+    """vth=2: contrib 3 fires (zero->0, subtract->1); a refractory neuron
+    integrates but cannot fire until its counter drains."""
+    vmem = jnp.zeros((1, 2), jnp.float32)
+    vth = jnp.array([2, 2], jnp.int32)
+    contrib = jnp.array([[3, 3]], jnp.int32)
+    refrac = jnp.array([[0, 2]], jnp.int32)     # neuron 1 is refractory
+    s, v, r = lif_step_ref(vmem, contrib, vth, refrac, reset="zero",
+                           refractory=2)
+    np.testing.assert_array_equal(np.asarray(s), [[1, 0]])
+    np.testing.assert_array_equal(np.asarray(v), [[0.0, 3.0]])  # no reset w/o fire
+    np.testing.assert_array_equal(np.asarray(r), [[2, 1]])      # reload / decay
+    s2, v2, _ = lif_step_ref(vmem, contrib, vth, jnp.zeros_like(refrac),
+                             reset="subtract")
+    np.testing.assert_array_equal(np.asarray(s2), [[1, 1]])
+    np.testing.assert_array_equal(np.asarray(v2), [[1.0, 1.0]])  # 3 - vth
+
+
+def test_lif_step_leak_is_exact_identity_at_zero():
+    v = jnp.full((1, 8), 7.0, jnp.float32)
+    z = jnp.zeros((1, 8), jnp.int32)
+    _, v1, _ = lif_step_ref(v, z, jnp.full((8,), 99, jnp.int32), z, leak=0.0)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v))
+    _, v2, _ = lif_step_ref(v, z, jnp.full((8,), 99, jnp.int32), z, leak=0.5)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v) * 0.5)
+
+
+# ----------------------------------------------------------------------- #
+# fused scan vs the naive per-step loop (the oracle)
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("cfg", [
+    TemporalConfig(n_steps=6),
+    TemporalConfig(n_steps=5, leak=0.25),
+    TemporalConfig(n_steps=4, reset="subtract"),
+    TemporalConfig(n_steps=7, leak=0.125, reset="subtract", refractory=2),
+])
+def test_fused_scan_matches_naive_loop(cfg):
+    topo = (256, 128, 128, 10)
+    net = _rand_net(jax.random.PRNGKey(cfg.n_steps), topo)
+    ev = _rand_events(jax.random.PRNGKey(77 + cfg.n_steps), cfg.n_steps, 9,
+                      topo[0])
+    got = net.plan(mode="temporal", temporal=cfg, interpret=True)(ev).logits
+    want = temporal_forward_naive(net, ev, cfg)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_temporal_accepts_wire_format_and_leading_shapes():
+    topo = (256, 128, 10)
+    cfg = TemporalConfig(n_steps=3, leak=0.5)
+    net = _rand_net(jax.random.PRNGKey(3), topo)
+    ev = _rand_events(jax.random.PRNGKey(4), 3, 5, topo[0])
+    plan = net.plan(mode="temporal", temporal=cfg, interpret=True)
+    base = np.asarray(plan(ev).logits)
+    # packed wire input
+    np.testing.assert_array_equal(
+        np.asarray(plan(packing.pack_spikes_np(ev)).logits), base)
+    # single sample [T, n_in] -> unbatched logits
+    one = np.asarray(plan(ev[:, 2]).logits)
+    assert one.shape == base.shape[1:]
+    np.testing.assert_array_equal(one, base[2])
+    # wrong T is rejected
+    with pytest.raises(ValueError):
+        plan(ev[:2])
+
+
+def test_temporal_non_32_multiple_input_width():
+    """n_in that is not a multiple of 32 packs with silent tail bits and
+    matches the naive dense loop exactly (hidden widths stay 32-aligned)."""
+    topo = (100, 64, 10)
+    cfg = TemporalConfig(n_steps=4, leak=0.25)
+    net = _rand_net(jax.random.PRNGKey(9), topo)
+    ev = _rand_events(jax.random.PRNGKey(10), 4, 6, 100, rate=0.5)
+    got = net.plan(mode="temporal", temporal=cfg, interpret=True)(ev).logits
+    np.testing.assert_array_equal(
+        np.asarray(got), temporal_forward_naive(net, ev, cfg))
+
+
+# ----------------------------------------------------------------------- #
+# T=1 identity with the static packed plane (acceptance criterion)
+# ----------------------------------------------------------------------- #
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_temporal_t1_bit_identical_to_packed(seed):
+    """mode='temporal' with T=1, zero leak, zero reset == mode='packed',
+    bit for bit, on random networks and spike batches."""
+    rng = np.random.default_rng(seed)
+    topo = [(128, 64, 10), (256, 128, 128, 10), (96, 32, 10)][seed % 3]
+    net = _rand_net(jax.random.PRNGKey(seed), topo)
+    batch = int(rng.integers(1, 9))
+    ev = _rand_events(jax.random.PRNGKey(seed + 1), 1, batch, topo[0],
+                      rate=float(rng.uniform(0.1, 0.9)))
+    cfg = TemporalConfig(n_steps=1, leak=0.0, reset="zero", refractory=0)
+    got = net.plan(mode="temporal", temporal=cfg, interpret=True)(ev).logits
+    want = net.plan(mode="packed", interpret=True)(ev[0]).logits
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_temporal_plan_is_cached_per_spec():
+    net = _rand_net(jax.random.PRNGKey(21), (128, 64, 10))
+    cfg = TemporalConfig(n_steps=4)
+    assert (net.plan(mode="temporal", temporal=cfg)
+            is net.plan(mode="temporal", temporal=cfg))
+    assert (net.plan(mode="temporal", temporal=cfg)
+            is not net.plan(mode="temporal",
+                            temporal=dataclasses.replace(cfg, n_steps=8)))
+    with pytest.raises(AssertionError):
+        net.plan(mode="temporal")            # needs a TemporalConfig
+    with pytest.raises(AssertionError):
+        net.plan(mode="packed", temporal=cfg)  # only temporal mode takes one
+
+
+# ----------------------------------------------------------------------- #
+# telemetry: per-step measured activity and the temporal cost model
+# ----------------------------------------------------------------------- #
+def test_temporal_telemetry_matches_per_step_popcounts():
+    topo = (256, 128, 10)
+    cfg = TemporalConfig(n_steps=5, leak=0.25)
+    net = _rand_net(jax.random.PRNGKey(31), topo)
+    ev = _rand_events(jax.random.PRNGKey(32), 5, 7, topo[0])
+    res = net.plan(mode="temporal", temporal=cfg, collect=True,
+                   telemetry=True, interpret=True)(ev)
+    assert len(res.planes) == len(res.loads) == len(topo) - 1
+    for pl, ld in zip(res.planes, res.loads):
+        assert pl.shape[:2] == (7, 5) and ld.shape[:2] == (7, 5)
+        want = np.asarray(packing.group_popcount(jnp.asarray(pl)))
+        np.testing.assert_array_equal(np.asarray(ld), want)
+    # tile 0's plane is the input stream itself (batch-first)
+    np.testing.assert_array_equal(
+        np.asarray(res.planes[0]),
+        packing.pack_spikes_np(ev).swapaxes(0, 1))
+
+
+def test_temporal_request_stats_device_matches_numpy():
+    rng = np.random.default_rng(0)
+    topo = (768, 256, 256, 10)
+    loads = [rng.integers(0, 129, size=(6, 9, -(-topo[t] // 128)))
+             .astype(np.int32) for t in range(len(topo) - 1)]
+    for p in (0, 2, 4):
+        dev = cm.temporal_request_stats_device(
+            topo, [jnp.asarray(l) for l in loads], p)
+        ref = cm.temporal_request_stats(topo, loads, p)
+        assert dev["n_steps"] == ref["n_steps"] == 9
+        np.testing.assert_array_equal(
+            np.asarray(dev["cycles"]), ref["cycles"])
+        np.testing.assert_array_equal(
+            np.asarray(dev["cycles_per_tile"]), ref["cycles_per_tile"])
+        np.testing.assert_allclose(
+            np.asarray(dev["latency_ns"]), ref["latency_ns"], rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(dev["energy_pj"]), ref["energy_pj"], rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(dev["energy_pj_per_step"]),
+            ref["energy_pj_per_step"], rtol=1e-5)
+
+
+def test_temporal_stream_cost_is_sum_of_per_step_costs():
+    """A T-step stream costs exactly the sum of T static requests run on its
+    per-step activity — the temporal model adds no hidden constants."""
+    rng = np.random.default_rng(1)
+    topo = (256, 128, 10)
+    loads = [rng.integers(0, 129, size=(3, 4, -(-topo[t] // 128)))
+             .astype(np.float64) for t in range(len(topo) - 1)]
+    got = cm.temporal_request_stats(topo, loads, 4)
+    want = sum(
+        cm.request_stats(topo, [l[:, t] for l in loads], 4).energy_pj
+        for t in range(4))
+    np.testing.assert_allclose(got["energy_pj"], want, rtol=1e-12)
+
+
+# ----------------------------------------------------------------------- #
+# event-stream serving
+# ----------------------------------------------------------------------- #
+def test_spike_engine_serves_event_streams_mixed_T():
+    from repro.serve.engine import EventRequest, SpikeEngine, SpikeRequest
+
+    topo = (256, 128, 10)
+    net = _rand_net(jax.random.PRNGKey(41), topo)
+    cfg = TemporalConfig(n_steps=1, leak=0.25, reset="subtract")
+    eng = SpikeEngine(net, max_batch=4, min_bucket=2, interpret=True,
+                      telemetry=True, read_ports=3, temporal=cfg)
+    ev8 = _rand_events(jax.random.PRNGKey(42), 8, 5, topo[0])
+    ev3 = _rand_events(jax.random.PRNGKey(43), 3, 3, topo[0])
+    sp = _rand_events(jax.random.PRNGKey(44), 1, 2, topo[0])[0]
+
+    e8 = [EventRequest(events=ev8[:, i]) for i in range(5)]
+    # wire-format submissions work too
+    e3 = [EventRequest(events=packing.pack_spikes_np(ev3[:, i]))
+          for i in range(3)]
+    s = [SpikeRequest(spikes=sp[i]) for i in range(2)]
+    eng.submit_events(e8[:2])
+    eng.submit(e3[0])                     # submit() routes EventRequests too
+    out = eng.serve(s + e8[2:] + e3[1:])
+    assert len(out) == 2 + 3 + 2
+    assert not eng._pending and not eng._pending_events and not eng._inflight
+
+    want8 = temporal_forward_naive(
+        net, ev8, dataclasses.replace(cfg, n_steps=8))
+    want3 = temporal_forward_naive(
+        net, ev3, dataclasses.replace(cfg, n_steps=3))
+    for i, r in enumerate(e8):
+        np.testing.assert_array_equal(r.logits, want8[i])
+        assert r.label == int(want8[i].argmax())
+    for i, r in enumerate(e3):
+        np.testing.assert_array_equal(r.logits, want3[i])
+
+    # telemetry: whole-stream device costs agree with the numpy model
+    res = net.plan(mode="temporal",
+                   temporal=dataclasses.replace(cfg, n_steps=8),
+                   telemetry=True, interpret=True)(ev8)
+    rs = cm.temporal_request_stats(
+        net.topology, [np.asarray(l) for l in res.loads], 3)
+    for i, r in enumerate(e8):
+        assert r.cycles == int(rs["cycles"][i])
+        assert r.latency_ns == pytest.approx(float(rs["latency_ns"][i]))
+        assert r.energy_pj == pytest.approx(float(rs["energy_pj"][i]),
+                                            rel=1e-5)
+        assert r.energy_pj_per_step == pytest.approx(r.energy_pj / 8,
+                                                     rel=1e-5)
+
+    st_ = eng.stats()
+    assert st_["n_requests"] == 2 and st_["n_event_requests"] == 8
+    assert st_["timesteps_total"] == 5 * 8 + 3 * 3
+    want_total = float(rs["energy_pj"].sum()) + sum(
+        r.energy_pj for r in e3)
+    assert st_["event_energy_pj_mean"] * 8 == pytest.approx(want_total,
+                                                            rel=1e-5)
+    assert st_["energy_pj_per_timestep"] == pytest.approx(
+        want_total / st_["timesteps_total"], rel=1e-5)
+
+
+def test_spike_engine_event_stats_empty():
+    from repro.serve.engine import SpikeEngine
+
+    net = _rand_net(jax.random.PRNGKey(51), (128, 64, 10))
+    st_ = SpikeEngine(net, interpret=True, telemetry=True).stats()
+    assert st_["n_event_requests"] == 0 and st_["timesteps_total"] == 0
+    assert st_["energy_pj_per_timestep"] == 0.0
+    assert st_["event_energy_pj_mean"] == 0.0
