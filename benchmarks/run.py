@@ -10,6 +10,8 @@ Emits ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   bench_kernels          (TPU plane)     Pallas kernel functional timings
   bench_temporal         (temporal plane) fused LIF scan vs naive loop,
                                           event-stream rates, encoders
+  bench_faults           (robustness)    accuracy vs fault rate, spare-column
+                                          remap, STDP repair, energy
   bench_roofline         (framework)     dry-run roofline per arch x shape
 """
 
@@ -24,6 +26,7 @@ def main() -> None:
         bench_accuracy,
         bench_circuit,
         bench_comparison,
+        bench_faults,
         bench_kernels,
         bench_online_learning,
         bench_roofline,
@@ -37,7 +40,7 @@ def main() -> None:
     failures = 0
     for mod in (bench_circuit, bench_timing, bench_online_learning, bench_system,
                 bench_comparison, bench_accuracy, bench_kernels, bench_temporal,
-                bench_spiking_lm, bench_roofline):
+                bench_faults, bench_spiking_lm, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

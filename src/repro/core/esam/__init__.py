@@ -12,7 +12,8 @@ Planes:
     throughput/energy/power claims from the calibrated 3nm cost model.
 """
 
-from repro.core.esam import arbiter, bnn, conversion, cost_model, learning, neuron, network, plan, tile
+from repro.core.esam import arbiter, bnn, conversion, cost_model, faults, learning, neuron, network, plan, tile
+from repro.core.esam.faults import FaultModel
 from repro.core.esam.network import EsamNetwork, SystemStats, reference_activity, system_stats
 from repro.core.esam.plan import EsamPlan, PlanResult, PlanSpec
 
@@ -21,6 +22,8 @@ __all__ = [
     "bnn",
     "conversion",
     "cost_model",
+    "faults",
+    "FaultModel",
     "learning",
     "neuron",
     "network",

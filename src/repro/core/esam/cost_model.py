@@ -194,6 +194,25 @@ def tile_geometry(n_in: int, n_out: int) -> tuple[int, int]:
     return -(-n_in // MAX_ARRAY_ROWS), -(-n_out // MAX_ARRAY_COLS)
 
 
+def spare_column_area_um2(
+    topology: Sequence[int], spare_cols: int, read_ports: int
+) -> float:
+    """Area overhead (um^2) of ``spare_cols`` redundant columns per tile.
+
+    The column-remapping mitigation (``faults.FaultModel.spare_cols``) buys
+    its accuracy back with silicon: each spare column spans every 128-row
+    group of its tile, at the chosen cell option's area ratio.  Only cell
+    area is charged — the remap itself is a build-time address swizzle, so
+    the arbiter/neuron periphery is unchanged.
+    """
+    area = 0.0
+    per_cell = CELL_AREA_6T_UM2 * CELL_AREA_RATIO[read_ports]
+    for t in range(len(topology) - 1):
+        n_groups, _ = tile_geometry(topology[t], topology[t + 1])
+        area += n_groups * MAX_ARRAY_ROWS * spare_cols * per_cell
+    return area
+
+
 @dataclasses.dataclass(frozen=True)
 class RequestStats:
     """Per-request hardware cost of a batch of inferences (paper units).

@@ -1,0 +1,266 @@
+"""Fault-injection & mitigation plane for the ESAM CIM macro.
+
+Real SRAM arrays do not read clean: stuck-at cells and device variation are
+the dominant accuracy killers in CIM-for-SNN (Chen's ReRAM-reliability
+survey), and robustness has to be modeled jointly across the
+device/circuit/system stack (Moitra et al.).  This module is that joint
+model for the repo: a :class:`FaultModel` describes a seeded fault
+population, and the plan layer (``core/esam/plan.py``) compiles the
+population into *every* execution mode's datapath — the faulted executable
+is the same jitted (or shard_map-ped) program with the fault masks riding
+the params pytree, so ``faults=None`` stays bit-identical to the clean plan
+(property-tested) and sharded fault masks are bit-identical to
+single-device (deterministic counter-based generation, replicated specs).
+
+Fault classes (all masks drawn once at plan build, device-resident):
+
+``stuck0_rate`` / ``stuck1_rate``
+    i.i.d. stuck-at cells: the stored bit reads as 0 / 1 regardless of what
+    was written ('0' -> weight -1, '1' -> +1).  Both classes are carved out
+    of ONE uniform draw per tile, so they are disjoint by construction.
+``dead_col_rate``
+    whole-column failures (broken column driver / WL short): every cell of
+    the column reads as 0.  Applied to *hidden* tiles only — the readout
+    tile's handful of class columns is trivially protected by spares in any
+    real deployment, while dead hidden columns are exactly what the
+    online-learning repair story (Sec 4.4.1's transposable port) is about.
+``vth_sigma``
+    per-column threshold variation: the t-bit V_th register of Fig 5 is
+    offset by ``round(N(0, vth_sigma))`` LSBs (integer datapath preserved).
+``read_disturb``
+    per-read upset probability.  The physical scaling is built in:
+    disturb grows linearly with the number of decoupled read ports pulling
+    on the cell and quadratically with the precharge voltage
+    (E ~ C*V^2 stress), so ``upset_rate(p) = read_disturb * p *
+    (v_prech/VPRECH)^2``.  Upset masks are *nested* across port counts
+    (one shared uniform draw): the p=1 upset set is a subset of the p=4
+    set, making the port scaling monotone by construction, not just in
+    expectation.
+
+Mitigation 1 — column remapping (``spare_cols``): each tile carries
+``spare_cols`` spare columns; the worst-scoring faulty columns (stuck +
+upset cell counts + |vth offset|) are remapped onto them at build time.
+Remapping is mask surgery *before* packing — the spare column holds the
+intended bits, so the wire format and every downstream kernel are
+untouched (remap-aware packing for free).  ``dataclasses.replace(fm,
+spare_cols=k)`` yields the mitigated variant of the *same* underlying
+fault population (identical seed -> identical draws).
+
+Mitigation 2 — online-learning repair: ``train/online.py`` accepts a
+``faults=`` model and re-trains the readout around the faulted prefix;
+:func:`clamp_readout_t` keeps the learned bits consistent with the array
+(writes into stuck cells don't take).  Mitigation 3 — fault-aware serving —
+lives in ``serve/engine.py`` (tile health scores + traffic draining).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.esam import cost_model as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """A seeded fault population (frozen + hashable: lives in PlanSpec).
+
+    All rates are per-cell (or per-column) probabilities in [0, 1]; the
+    masks they induce are drawn with counter-based keys from ``seed`` only,
+    so two models with equal fields inject *identical* faults — on any
+    device count, in any plan mode.
+    """
+
+    seed: int = 0
+    stuck0_rate: float = 0.0
+    stuck1_rate: float = 0.0
+    dead_col_rate: float = 0.0          # hidden tiles only (see module doc)
+    vth_sigma: float = 0.0              # per-column V_th offset, LSBs
+    read_disturb: float = 0.0           # per-read upset prob at 1 port, VPRECH
+    v_prech: float = cm.VPRECH          # precharge voltage (V)
+    spare_cols: int = 0                 # remap budget per tile (mitigation 1)
+
+    def __post_init__(self):
+        for f in ("stuck0_rate", "stuck1_rate", "dead_col_rate",
+                  "read_disturb"):
+            v = getattr(self, f)
+            assert 0.0 <= v <= 1.0, (f, v)
+        assert self.stuck0_rate + self.stuck1_rate <= 1.0, (
+            "stuck0 + stuck1 cannot exceed 1", self)
+        assert self.vth_sigma >= 0.0 and self.spare_cols >= 0
+        assert self.v_prech > 0.0
+
+    @property
+    def any_faults(self) -> bool:
+        return any((self.stuck0_rate, self.stuck1_rate, self.dead_col_rate,
+                    self.vth_sigma, self.read_disturb))
+
+    def upset_rate(self, ports: int) -> float:
+        """Per-read upset probability at ``ports`` effective read ports.
+
+        Linear in the port count (each decoupled port is one more read
+        stress per cycle), quadratic in V_prech (C*V^2 bit-line stress),
+        normalized so ``read_disturb`` is the 1-port rate at the paper's
+        500 mV precharge.  Clipped to 1.
+        """
+        r = self.read_disturb * max(1, int(ports)) * (
+            self.v_prech / cm.VPRECH) ** 2
+        return float(min(r, 1.0))
+
+    # ------------------------------------------------------------------ #
+    # mask generation (build-time, deterministic)
+    # ------------------------------------------------------------------ #
+    def build_masks(
+        self,
+        topology: Sequence[int],
+        ports_options: Sequence[int] = (4,),
+    ) -> dict:
+        """Draw the device-resident fault masks for every tile.
+
+        Returns a params-pytree-shaped dict::
+
+            {"stuck0":  (bool[n_in, n_out] per tile),
+             "stuck1":  (bool[n_in, n_out] per tile),
+             "vth_off": (int32[n_out]      per tile),
+             "upset":   {ports: (bool[n_in, n_out] per tile), ...}}
+
+        with one ``upset`` entry per effective port count in
+        ``ports_options`` (nested sets — see module doc).  With
+        ``spare_cols > 0`` the remap surgery has already been applied.
+        """
+        key = jax.random.PRNGKey(int(self.seed))
+        ports_options = tuple(sorted({max(1, int(p)) for p in ports_options}))
+        n_tiles = len(topology) - 1
+        s0r, s1r = float(self.stuck0_rate), float(self.stuck1_rate)
+        masks: dict = {"stuck0": [], "stuck1": [], "vth_off": [],
+                       "upset": {p: [] for p in ports_options}}
+        for t in range(n_tiles):
+            shape = (int(topology[t]), int(topology[t + 1]))
+            kt = jax.random.fold_in(key, t)
+            u = jax.random.uniform(jax.random.fold_in(kt, 0), shape)
+            stuck0 = u < s0r                       # disjoint by construction
+            stuck1 = (u >= s0r) & (u < s0r + s1r)
+            if self.dead_col_rate and t < n_tiles - 1:
+                dead = jax.random.uniform(
+                    jax.random.fold_in(kt, 1), (shape[1],)
+                ) < float(self.dead_col_rate)
+                stuck0 = stuck0 | dead[None, :]    # dead column reads all-0
+                stuck1 = stuck1 & ~dead[None, :]
+            if self.vth_sigma:
+                vth_off = jnp.round(
+                    jax.random.normal(jax.random.fold_in(kt, 2), (shape[1],))
+                    * float(self.vth_sigma)).astype(jnp.int32)
+            else:
+                vth_off = jnp.zeros((shape[1],), jnp.int32)
+            # one shared draw -> nested upset sets across port counts
+            uu = jax.random.uniform(jax.random.fold_in(kt, 3), shape)
+            ups = {p: uu < self.upset_rate(p) for p in ports_options}
+
+            if self.spare_cols:
+                stuck0, stuck1, vth_off, ups = _remap_columns(
+                    stuck0, stuck1, vth_off, ups, int(self.spare_cols))
+            masks["stuck0"].append(stuck0)
+            masks["stuck1"].append(stuck1)
+            masks["vth_off"].append(vth_off)
+            for p in ports_options:
+                masks["upset"][p].append(ups[p])
+        return {
+            "stuck0": tuple(masks["stuck0"]),
+            "stuck1": tuple(masks["stuck1"]),
+            "vth_off": tuple(masks["vth_off"]),
+            "upset": {p: tuple(v) for p, v in masks["upset"].items()},
+        }
+
+
+def _remap_columns(stuck0, stuck1, vth_off, ups: dict, spare_cols: int):
+    """Mitigation 1: clear the worst ``spare_cols`` faulty columns per tile.
+
+    Column fault score = stuck cells + upset cells (at the largest port
+    count — the superset, masks being nested) + |vth offset|.  The top
+    ``spare_cols`` columns *with a non-zero score* are remapped onto clean
+    spares: their masks and threshold offsets are cleared.  Deterministic
+    (stable argsort), and performed before bit-packing, so the spare column
+    carries the intended bits and no downstream consumer changes.
+    """
+    p_max = max(ups)
+    score = (stuck0.sum(0) + stuck1.sum(0) + ups[p_max].sum(0)
+             + jnp.abs(vth_off)).astype(jnp.int32)
+    order = jnp.argsort(-score)                  # stable: ties by column index
+    sel = order[:spare_cols]
+    clear = jnp.zeros(score.shape, bool).at[sel].set(score[sel] > 0)
+    stuck0 = stuck0 & ~clear[None, :]
+    stuck1 = stuck1 & ~clear[None, :]
+    vth_off = jnp.where(clear, 0, vth_off)
+    ups = {p: m & ~clear[None, :] for p, m in ups.items()}
+    return stuck0, stuck1, vth_off, ups
+
+
+# ---------------------------------------------------------------------- #
+# datapath application (inside the compiled plan)
+# ---------------------------------------------------------------------- #
+def faulted_bits(w, stuck0, stuck1, upset):
+    """Effective stored bits of one tile under its fault masks.
+
+    Read-disturb flips first, then the stuck clamp wins (a stuck cell
+    cannot be upset — its node is hard-tied).  All-False masks are exact
+    no-ops on the {0,1} integer bits, which is what makes the zero-rate
+    model bit-identical to the clean plan.
+    """
+    w_eff = jnp.where(upset, 1 - w, w)
+    w_eff = jnp.where(stuck1, 1, jnp.where(stuck0, 0, w_eff))
+    return w_eff.astype(w.dtype)
+
+
+def faulted_weights(weight_bits, masks: dict, ports: int):
+    """Apply the masks at ``ports`` effective read ports to every tile."""
+    ups = masks["upset"][ports]
+    return [
+        faulted_bits(w, s0, s1, u)
+        for w, s0, s1, u in zip(
+            weight_bits, masks["stuck0"], masks["stuck1"], ups)
+    ]
+
+
+def faulted_vth(vth, masks: dict):
+    """Per-column threshold variation: integer LSB offsets on V_th."""
+    return [v + off for v, off in zip(vth, masks["vth_off"])]
+
+
+def mask_specs(masks: dict, w_specs, v_specs) -> dict:
+    """Shard specs for the mask pytree, mirroring the weight/vth specs so
+    fault masks follow their tile's ``tile_col`` sharding exactly."""
+    return {
+        "stuck0": w_specs,
+        "stuck1": w_specs,
+        "vth_off": v_specs,
+        "upset": {p: w_specs for p in masks["upset"]},
+    }
+
+
+# ---------------------------------------------------------------------- #
+# online-learning repair support (mitigation 2)
+# ---------------------------------------------------------------------- #
+def clamp_readout_t(bits_t, masks: dict, ports: int = 4):
+    """Effective transposed-resident readout bits under the last tile's
+    faults: writes into stuck cells don't take, and reads through the
+    inference ports see the disturb flips.  The online-learning driver
+    applies this between epochs so the learned state it evaluates (and
+    ships) is exactly what the faulted array would read back.
+    """
+    s0 = masks["stuck0"][-1].T
+    s1 = masks["stuck1"][-1].T
+    up = masks["upset"][ports][-1].T
+    return faulted_bits(bits_t, s0, s1, up)
+
+
+def faulty_cells(masks: dict) -> list[int]:
+    """Per-tile count of cells touched by any fault class (reporting)."""
+    p_max = max(masks["upset"])
+    return [
+        int((s0 | s1 | u).sum())
+        for s0, s1, u in zip(
+            masks["stuck0"], masks["stuck1"], masks["upset"][p_max])
+    ]

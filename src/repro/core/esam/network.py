@@ -93,6 +93,7 @@ class EsamNetwork:
         record_vmem_trace: bool = False,
         interpret: bool | None = None,
         temporal=None,  # Optional[temporal.TemporalConfig], mode="temporal"
+        faults=None,  # Optional[faults.FaultModel]
         rules=None,
     ) -> EsamPlan:
         """Build (or fetch from this network's cache) one compiled plan.
@@ -102,7 +103,11 @@ class EsamNetwork:
         with rules are cached by rule-object identity.  ``mode="temporal"``
         takes a :class:`~repro.core.esam.temporal.TemporalConfig` — each
         (T, leak, reset, refractory, collect, telemetry) tuple compiles one
-        executable, cached like every other spec.
+        executable, cached like every other spec.  ``faults`` takes a
+        :class:`~repro.core.esam.faults.FaultModel` to compile the plan with
+        that fault population injected into the datapath (each model is its
+        own cache entry; ``None`` is the clean plan, bit-identical to
+        pre-fault builds).
         """
         spec = PlanSpec(
             mode=mode,
@@ -112,6 +117,7 @@ class EsamNetwork:
             record_vmem_trace=record_vmem_trace,
             interpret=interpret,
             temporal=temporal,
+            faults=faults,
         )
         key = (spec, None if rules is None else id(rules))
         cached = self._plan_cache.get(key)

@@ -58,6 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import packing
 from repro.core.esam import arbiter as arb
+from repro.core.esam import faults as faults_mod
 from repro.core.esam import tile as tile_mod
 from repro.core.esam import temporal as temporal_mod
 
@@ -80,6 +81,10 @@ class PlanSpec:
     #: part of the cache key, so each (T, collect, telemetry) spec compiles
     #: exactly one executable.
     temporal: Optional[temporal_mod.TemporalConfig] = None
+    #: fault population injected into the datapath (frozen + hashable, so
+    #: each FaultModel is its own cache entry).  ``None`` compiles the clean
+    #: plan, bit-identical to pre-fault builds (property-tested).
+    faults: Optional[faults_mod.FaultModel] = None
 
     def __post_init__(self):
         assert self.mode in MODES, (self.mode, MODES)
@@ -225,6 +230,27 @@ class EsamPlan:
             and col_size > 1
             for i in range(n_tiles)
         )
+
+        # -------- fault masks (drawn once, at plan build) -----------------
+        # Cycle-sweep plans need one upset mask per *effective* port count in
+        # the sweep (disturb scales with ports); every other mode reads at
+        # the plan's single port count.  Counter-based generation makes the
+        # masks identical across device counts, so sharded faulted plans stay
+        # bit-identical to single-device (the masks just ride the replicated/
+        # column-sharded param specs).
+        if spec.faults is not None:
+            if spec.mode == "cycle" and isinstance(spec.read_ports, tuple):
+                opts = spec.read_ports
+            else:
+                opts = (spec.read_ports if isinstance(spec.read_ports, int)
+                        else 4,)
+            self._fault_ports = tuple(
+                sorted({max(1, int(o)) for o in opts}))
+            self._fault_masks = spec.faults.build_masks(
+                self.topology, self._fault_ports)
+        else:
+            self._fault_ports = ()
+            self._fault_masks = None
         self._exec = self._compile()
 
     # ------------------------------------------------------------------ #
@@ -248,9 +274,22 @@ class EsamPlan:
                 hidden.append(s)
             return s, hidden
 
+        eff_ports = (max(1, int(spec.read_ports))
+                     if isinstance(spec.read_ports, int) else None)
+
         def fn(params, x):
             wb, vth = params["weight_bits"], params["vth"]
             off = params["out_offset"]
+            fmk = params.get("faults")
+            if fmk is not None:
+                # fault the datapath ONCE, up front: every mode below then
+                # runs its ordinary clean program on the effective weights/
+                # thresholds the faulty array would actually read (cycle
+                # sweeps re-fault per port option — disturb scales with the
+                # ports pulling on the cell).
+                vth = tuple(faults_mod.faulted_vth(vth, fmk))
+                if spec.mode != "cycle":
+                    wb = tuple(faults_mod.faulted_weights(wb, fmk, eff_ports))
             out: dict[str, Any] = {}
             if spec.mode == "functional":
                 s, hidden = dense_prefix(wb, vth, x)
@@ -315,9 +354,11 @@ class EsamPlan:
                 for opt in options:
                     ports = max(1, int(opt))
                     if ports not in by_ports:
+                        wb_p = (faults_mod.faulted_weights(wb, fmk, ports)
+                                if fmk is not None else wb)
                         traces = []
                         s = x
-                        for w, th in zip(wb, vth):
+                        for w, th in zip(wb_p, vth):
                             tr = tile_mod.simulate_tile_batch(
                                 w, s, th, ports, spec.record_vmem_trace)
                             traces.append(tr)
@@ -358,6 +399,9 @@ class EsamPlan:
         params_spec = {
             "weight_bits": w_specs, "vth": v_specs, "out_offset": P(None),
         }
+        if self._fault_masks is not None:
+            params_spec["faults"] = faults_mod.mask_specs(
+                self._fault_masks, w_specs, v_specs)
         x_spec = P(ba, None, None) if self.spec.mode == "temporal" else P(ba, None)
         mapped = compat.shard_map(
             fn,
@@ -425,6 +469,8 @@ class EsamPlan:
             "vth": tuple(self.network.vth),
             "out_offset": self.network.out_offset,
         }
+        if self._fault_masks is not None:
+            params["faults"] = self._fault_masks
         out = self._exec(params, x)
         out = jax.tree_util.tree_map(
             lambda a: a[:b].reshape(lead + a.shape[1:]), out)

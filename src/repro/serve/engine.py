@@ -19,6 +19,7 @@ on (batch, T) and drained through the membrane-resident temporal plan
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.distributed import sharding as shd
 from repro.models import lm
+from repro.train import fault_tolerance as ft
 
 
 @dataclasses.dataclass
@@ -193,6 +195,9 @@ class SpikeEngine:
                  interpret: Optional[bool] = None,
                  telemetry: bool = False, read_ports: int = 4,
                  temporal=None,  # Optional[temporal.TemporalConfig]
+                 faults=None,  # Optional[faults.FaultModel]
+                 watchdog: Optional[ft.StragglerWatchdog] = None,
+                 health_threshold: float = 0.75,
                  rules: Optional[shd.ShardingRules] = None,
                  batch_size: Optional[int] = None):
         from repro.core import packing
@@ -207,9 +212,18 @@ class SpikeEngine:
         self.telemetry = telemetry
         self.read_ports = read_ports
         self.rules = rules
+        self.faults = faults
+        self.health_threshold = health_threshold
         self._packing = packing
         self._cm = cm
         self._interpret = interpret
+        self._min_bucket = min_bucket
+        # dispatch-round straggler watchdog: each continuous-batching round's
+        # host-side wall time (packing + dispatch; device work is async) is
+        # recorded, and rounds slower than threshold x the EMA are flagged —
+        # surfaced through stats() so a coordinator can drain traffic away
+        self._watchdog = watchdog or ft.StragglerWatchdog()
+        self._rounds = 0
         # LIF dynamics template for event-stream requests; n_steps is taken
         # from each request (per-request T), the rest from this config.  The
         # default (zero leak, zero reset) makes a T=1 event request
@@ -219,8 +233,22 @@ class SpikeEngine:
         self._buckets = _bucket_sizes(max_batch, min_bucket, dp)
         self._plan = net.plan(
             mode="packed", telemetry=telemetry, interpret=interpret,
-            rules=rules)
+            faults=faults, rules=rules)
         n_tiles = len(net.topology) - 1
+        # tile-health calibration: expected mean drain cycles per tile on the
+        # reference activity profile (the paper's 53%/50% calibration point).
+        # Measured telemetry deviating from this — up (stuck-at-1 load
+        # inflation) or down (dead/stuck-at-0 columns silencing traffic) —
+        # marks the tile degraded.
+        topo = net.topology
+        ref = [
+            np.full((1, cm.tile_geometry(topo[t], topo[t + 1])[0]),
+                    float(cm.REF_SPIKES_PER_GROUP[t])
+                    if t < len(cm.REF_SPIKES_PER_GROUP) else 64.0)
+            for t in range(n_tiles)
+        ]
+        self._expected_tile_cycles = cm.request_stats(
+            topo, ref, read_ports).cycles_per_tile.mean(axis=0)  # [n_tiles]
         # admission queues + per-round device results awaiting one host flush
         self._pending: list[SpikeRequest] = []
         self._pending_events: list[EventRequest] = []
@@ -277,7 +305,7 @@ class SpikeEngine:
         while self._pending:
             round_reqs = self._pending[: self.max_batch]
             del self._pending[: self.max_batch]
-            self._dispatch(round_reqs)
+            self._timed_round(self._dispatch, round_reqs)
         while self._pending_events:
             # one continuous-batching round per (batch, T) bucket: take the
             # head request's T and everything sharing it, in arrival order
@@ -289,9 +317,18 @@ class SpikeEngine:
                 else:
                     rest.append(r)
             self._pending_events = rest
-            self._dispatch_events(round_reqs, t)
+            self._timed_round(self._dispatch_events, round_reqs, t)
         self._flush()
         return out
+
+    def _timed_round(self, dispatch, *args) -> None:
+        """One dispatch round under the straggler watchdog: the host-side
+        round wall time (packing + dispatch; device work stays async) feeds
+        the EMA, and slow rounds are flagged into ``stats()``."""
+        t0 = time.perf_counter()
+        dispatch(*args)
+        self._watchdog.record(self._rounds, time.perf_counter() - t0)
+        self._rounds += 1
 
     def _bucket(self, n: int) -> int:
         for b in self._buckets:
@@ -332,7 +369,7 @@ class SpikeEngine:
         cfg = dataclasses.replace(self._temporal, n_steps=n_steps)
         plan = self.net.plan(
             mode="temporal", temporal=cfg, telemetry=self.telemetry,
-            interpret=self._interpret, rules=self.rules)
+            interpret=self._interpret, faults=self.faults, rules=self.rules)
         res = plan(jnp.asarray(packed))
         rs = None
         if self.telemetry:
@@ -380,6 +417,55 @@ class SpikeEngine:
         self._inflight.clear()
 
     # -------------------------------------------------------------- #
+    # fault-aware serving: tile health + degraded-mesh replan
+    # -------------------------------------------------------------- #
+    def tile_health(self) -> np.ndarray:
+        """Per-tile health score in [0, 1] from device-resident telemetry.
+
+        The engine's telemetry totals already carry each tile's measured
+        drain cycles (group popcounts straight off the wire, folded at
+        flush).  Health is ``1 - |measured - expected| / expected`` against
+        the reference-activity calibration, clipped to [0, 1]: stuck-at-1
+        faults inflate a tile's arbiter loads, dead/stuck-at-0 columns
+        silence them, and both read as deviation.  Tiles with no traffic yet
+        (or telemetry off) score 1.0 — unknown is not degraded.
+        """
+        n_tiles = len(self.net.topology) - 1
+        if not self.telemetry or self._served == 0:
+            return np.ones((n_tiles,))
+        measured = self._totals["cycles_per_tile"] / self._served
+        dev = np.abs(measured - self._expected_tile_cycles) / np.maximum(
+            self._expected_tile_cycles, 1e-9)
+        return np.clip(1.0 - dev, 0.0, 1.0)
+
+    def health(self) -> float:
+        """Engine health: the weakest tile's score (pipeline bottleneck)."""
+        return float(self.tile_health().min())
+
+    def replan_degraded(self, n_devices: int) -> ft.ReplanResult:
+        """Degraded-mesh operation: shrink the data-parallel mesh to the
+        surviving device count and recompile the serving plan.
+
+        In-flight results are flushed first, then ``elastic_replan`` picks
+        the largest power-of-two data axis within ``n_devices`` (surplus
+        chips idle as hot spares — ``.dropped_chips`` of the returned plan),
+        the bucket ladder is rebuilt for the new divisibility, and the
+        engine's plan is recompiled with the same fault model.  Telemetry
+        totals survive (same network, same tiles).
+        """
+        self._flush()
+        plan = ft.elastic_replan(max(1, int(n_devices)), model_parallel=1)
+        (data, _), _ = plan
+        self.rules = (shd.make_esam_rules(shd.esam_data_mesh(data))
+                      if data > 1 else None)
+        dp = 1 if self.rules is None else self.rules.axis_size("spike_batch")
+        self._buckets = _bucket_sizes(self.max_batch, self._min_bucket, dp)
+        self._plan = self.net.plan(
+            mode="packed", telemetry=self.telemetry,
+            interpret=self._interpret, faults=self.faults, rules=self.rules)
+        return plan
+
+    # -------------------------------------------------------------- #
     # aggregate telemetry
     # -------------------------------------------------------------- #
     def stats(self) -> dict:
@@ -402,6 +488,13 @@ class SpikeEngine:
             "read_ports": self.read_ports,
             "data_parallel": 1 if self.rules is None
             else self.rules.axis_size("spike_batch"),
+            # fault-aware serving: health + dispatch-round watchdog
+            "faulted": self.faults is not None,
+            "tile_health": [float(h) for h in self.tile_health()],
+            "health": self.health(),
+            "degraded": self.health() < self.health_threshold,
+            "dispatch_rounds": self._rounds,
+            "straggler_rounds": len(self._watchdog.flagged),
             # event-stream aggregates (temporal plane)
             "n_event_requests": ne,
             "timesteps_total": nt,
@@ -429,4 +522,68 @@ class SpikeEngine:
             "throughput_pipelined_inf_s":
                 1e9 / (bottleneck_cycles * spec.clock_ns)
                 if bottleneck_cycles else 0.0,
+        }
+
+
+# ------------------------------------------------------------------ #
+# fault-aware routing across SpikeEngine replicas
+# ------------------------------------------------------------------ #
+class FaultAwareRouter:
+    """Drains spike traffic around degraded replicas.
+
+    Holds N ``SpikeEngine`` replicas (each typically a physical macro / mesh
+    slice, possibly built with its own ``FaultModel``) and routes every
+    request by tile health: round-robin across the replicas whose weakest
+    tile still scores above ``health_threshold``, falling back to the single
+    healthiest replica when all are degraded (serving never stalls).  Health
+    comes from each engine's device-resident telemetry — the router performs
+    no extra device work — so a replica whose measured tile loads drift from
+    the calibration profile (stuck-at load inflation, dead-column silence)
+    organically stops receiving traffic as soon as its stats reflect it.
+    """
+
+    def __init__(self, engines, *, health_threshold: float = 0.75):
+        assert engines, "router needs at least one engine"
+        self.engines = list(engines)
+        self.health_threshold = health_threshold
+        self.routed = [0] * len(self.engines)
+        self._rr = 0
+
+    def route(self, request) -> int:
+        """Queue one request on the chosen replica; returns its index."""
+        scores = [e.health() for e in self.engines]
+        healthy = [i for i, s in enumerate(scores)
+                   if s >= self.health_threshold]
+        if healthy:
+            idx = healthy[self._rr % len(healthy)]
+            self._rr += 1
+        else:
+            idx = int(np.argmax(scores))
+        self.engines[idx].submit(request)
+        self.routed[idx] += 1
+        return idx
+
+    def serve(self, requests=None) -> list:
+        """Route ``requests`` (optional), then drain every replica."""
+        if requests is not None:
+            if isinstance(requests, (SpikeRequest, EventRequest)):
+                requests = [requests]
+            for r in requests:
+                self.route(r)
+        for eng in self.engines:
+            eng.serve()
+        return requests if requests is not None else []
+
+    def stats(self) -> dict:
+        per_engine = [
+            {"health": e.health(), "degraded": h < self.health_threshold,
+             "routed": n, "n_requests": e.stats()["n_requests"]}
+            for e, n, h in zip(self.engines, self.routed,
+                               (e.health() for e in self.engines))
+        ]
+        return {
+            "n_engines": len(self.engines),
+            "health_threshold": self.health_threshold,
+            "routed": list(self.routed),
+            "engines": per_engine,
         }

@@ -55,12 +55,22 @@ class CheckpointManager:
         return restored, step
 
     def restore_data_state(self) -> Optional[dict]:
+        """Data-pipeline cursor from the latest manifest, or ``None``.
+
+        A missing or truncated ``manifest.json`` (crash mid-save of a
+        non-atomic copy, partial rsync) degrades to a fresh data cursor
+        instead of crashing the restart path.
+        """
         step = ckpt_io.latest_step(self.directory)
         if step is None:
             return None
         import json, os
-        with open(os.path.join(self.directory, f"step_{step:08d}", "manifest.json")) as f:
-            return json.load(f)["extra"].get("data_state")
+        path = os.path.join(self.directory, f"step_{step:08d}", "manifest.json")
+        try:
+            with open(path) as f:
+                return json.load(f)["extra"].get("data_state")
+        except (FileNotFoundError, json.JSONDecodeError, KeyError):
+            return None
 
 
 @dataclasses.dataclass
@@ -88,11 +98,28 @@ class StragglerWatchdog:
         self._ema = self.ema_decay * self._ema + (1 - self.ema_decay) * wall_s
 
 
-def elastic_replan(n_chips: int, *, model_parallel: int = 16) -> tuple[tuple[int, ...], tuple[str, ...]]:
+class ReplanResult(tuple):
+    """``((data, model), ("data", "model"))`` — equality-compatible with the
+    historical plain 2-tuple — plus ``dropped_chips``: how many surviving
+    chips the replanned mesh leaves idle as spares (non-dividing
+    ``model_parallel`` and/or the power-of-two data rounding)."""
+
+    dropped_chips: int
+
+    def __new__(cls, mesh_shape, axis_names, dropped_chips):
+        self = super().__new__(cls, (mesh_shape, axis_names))
+        self.dropped_chips = int(dropped_chips)
+        return self
+
+
+def elastic_replan(n_chips: int, *, model_parallel: int = 16) -> ReplanResult:
     """Largest valid (data, model) mesh within the surviving chip count.
 
     Model parallelism is pinned (weights must still fit); the data axis
-    absorbs the loss.  1000+-node note: on multi-pod meshes the pod axis
+    absorbs the loss.  ``model_parallel`` need not divide ``n_chips``: the
+    leftover chips stay idle as hot spares, and the count is documented in
+    the returned :class:`ReplanResult`'s ``dropped_chips`` (0 on a clean
+    power-of-two fit).  1000+-node note: on multi-pod meshes the pod axis
     shrinks first (whole-pod failure domain), then data.
     """
     if n_chips < model_parallel:
@@ -100,7 +127,8 @@ def elastic_replan(n_chips: int, *, model_parallel: int = 16) -> tuple[tuple[int
     data = n_chips // model_parallel
     # largest power-of-two data axis keeps batch divisibility
     data = 2 ** int(math.log2(data))
-    return (data, model_parallel), ("data", "model")
+    return ReplanResult((data, model_parallel), ("data", "model"),
+                        n_chips - data * model_parallel)
 
 
 def simulate_failure_and_resume(state, manager: CheckpointManager, step: int):

@@ -27,6 +27,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.esam import faults as faults_mod
 from repro.core.esam import learning
 from repro.core.esam.network import EsamNetwork
 
@@ -67,6 +68,7 @@ def train_online(
     checkpoint_every: int = 0,
     resume: bool = False,
     interpret: bool | None = None,
+    faults: faults_mod.FaultModel | None = None,
 ) -> OnlineTrainResult:
     """Supervised-STDP training of the readout tile over multiple epochs.
 
@@ -75,6 +77,17 @@ def train_online(
     key, deterministic).  With ``checkpoint_dir`` set, the full weight list is
     checkpointed every ``checkpoint_every`` epochs (and at the end);
     ``resume=True`` restarts from the latest step found there.
+
+    ``faults`` turns the loop into the *online-learning repair* mitigation:
+    the frozen prefix runs through a faulted plan (the hidden activations
+    are what a damaged array would actually emit — dead columns included),
+    and the learned readout state is clamped through the last tile's fault
+    masks between epochs (``faults.clamp_readout_t``: writes into stuck
+    cells don't take, reads see the disturb flips), so the per-epoch
+    accuracy is the accuracy the faulted hardware would really recover.
+    The returned network carries the *programmed* bits — evaluate it under
+    the same ``FaultModel`` (``network.plan(..., faults=...)``) for the
+    deployed faulted accuracy.
     """
     from repro.checkpoint import io as ckpt_io
 
@@ -84,9 +97,20 @@ def train_online(
         raise ValueError("eval_spikes and eval_labels must be given together")
     spikes = jnp.asarray(spikes).astype(bool)
     labels = jnp.asarray(labels)
-    # one compiled prefix plan, reused for train and eval splits
-    prefix_plan = network.plan(mode="prefix", interpret=interpret)
+    # one compiled prefix plan, reused for train and eval splits; with a
+    # FaultModel the prefix is the faulted executable (same seed => same
+    # masks as any other plan built from this model)
+    prefix_plan = network.plan(mode="prefix", interpret=interpret,
+                               faults=faults)
     n_pre = network.topology[-2]
+    fault_masks = None
+    if faults is not None:
+        fault_masks = faults.build_masks(network.topology, (4,))
+
+    def clamp(bt):
+        if fault_masks is None:
+            return bt
+        return faults_mod.clamp_readout_t(bt, fault_masks, 4)
 
     def run_prefix(x):
         out = prefix_plan(x).prefix
@@ -128,11 +152,28 @@ def train_online(
         # learning events target the deployed readout: the wrong winner is the
         # argmax of the offset-shifted logits, matching _readout_accuracy and
         # EsamNetwork.forward
-        bits_t, n = learning.column_event_epoch(
-            bits_t, x_e, y_e, ep_key,
-            p_pot=float(p_pot), p_dep=float(p_dep),
-            out_offset=network.out_offset, interpret=interpret)
-        acc = _readout_accuracy(bits_t, eval_pre, eval_labels, network.out_offset)
+        if fault_masks is None:
+            bits_t, n = learning.column_event_epoch(
+                bits_t, x_e, y_e, ep_key,
+                p_pot=float(p_pot), p_dep=float(p_dep),
+                out_offset=network.out_offset, interpret=interpret)
+            eval_bits = bits_t
+        else:
+            # bits_t holds the *programmed* state; the epoch reads and
+            # writes the *effective* (clamped) state the array exposes.
+            # Writes that landed (effective bit changed) are folded back
+            # into the programmed state — a write into a stuck cell is
+            # silently dropped, exactly like the hardware.  clamp() is a
+            # pure function of static masks, so recomputing it after the
+            # donated epoch call is exact.
+            eff, n = learning.column_event_epoch(
+                clamp(bits_t), x_e, y_e, ep_key,
+                p_pot=float(p_pot), p_dep=float(p_dep),
+                out_offset=network.out_offset, interpret=interpret)
+            bits_t = jnp.where(eff != clamp(bits_t), eff, bits_t)
+            eval_bits = clamp(bits_t)
+        acc = _readout_accuracy(
+            eval_bits, eval_pre, eval_labels, network.out_offset)
         accuracy.append(float(acc))
         n_updates.append(int(n))
         at_end = epoch + 1 == epochs

@@ -105,6 +105,40 @@ def test_elastic_replan():
         ft.elastic_replan(8)
 
 
+def test_elastic_replan_non_dividing_model_parallel():
+    """model_parallel need not divide n_chips; the leftovers become spares
+    and the count is reported on the result."""
+    res = ft.elastic_replan(500, model_parallel=12)
+    assert res == ((32, 12), ("data", "model"))
+    assert res.dropped_chips == 500 - 32 * 12  # 116 hot spares
+    # clean power-of-two fit drops nothing
+    assert ft.elastic_replan(512).dropped_chips == 0
+    # pod loss: 496 chips, mp=16 -> data 31 -> 16; 240 idle
+    assert ft.elastic_replan(496).dropped_chips == 496 - 16 * 16
+    # the result still unpacks like the historical plain tuple
+    (data, model), axes = ft.elastic_replan(500, model_parallel=12)
+    assert (data, model, axes) == (32, 12, ("data", "model"))
+
+
+def test_restore_data_state_missing_or_truncated_manifest(tmp_path):
+    mgr = ft.CheckpointManager(str(tmp_path), async_save=False)
+    # empty directory: no steps at all
+    assert mgr.restore_data_state() is None
+    mgr.save({"w": jnp.ones((4,))}, 3, data_state={"cursor": 17})
+    mgr.wait()
+    assert mgr.restore_data_state() == {"cursor": 17}
+    manifest = os.path.join(str(tmp_path), "step_00000003", "manifest.json")
+    # truncated manifest (crash mid-copy): degrade to a fresh cursor
+    with open(manifest) as f:
+        content = f.read()
+    with open(manifest, "w") as f:
+        f.write(content[: len(content) // 2])
+    assert mgr.restore_data_state() is None
+    # missing manifest entirely
+    os.remove(manifest)
+    assert mgr.restore_data_state() is None
+
+
 def test_data_pipeline_deterministic_and_resumable():
     cfg = PipelineConfig(vocab_size=1000, seq_len=64, global_batch=8, seed=5)
     p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)

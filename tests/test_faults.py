@@ -1,0 +1,364 @@
+"""Fault-injection & mitigation plane.
+
+Covers the robustness tentpole: seeded mask determinism, ``faults=None`` /
+zero-rate bit-identity against the clean datapath in all five plan modes,
+fault application equivalence across modes (faulted weights are just
+different weights, so every mode-identity property survives injection),
+read-disturb port/V_prech scaling, column remapping onto spares, the
+online-learning repair driver, and fault-aware serving (tile health,
+traffic draining, degraded-mesh replan, dispatch-round watchdog).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esam import cost_model as cm
+from repro.core.esam import faults as faults_mod
+from repro.core.esam.faults import FaultModel
+from repro.core.esam.network import EsamNetwork
+from repro.core.esam.temporal import TemporalConfig
+
+
+def _rand_net(key, topo, vth_lo=-5, vth_hi=5):
+    n_tiles = len(topo) - 1
+    bits = [
+        jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i + 1])).astype(jnp.int8)
+        for i in range(n_tiles)
+    ]
+    vth = [
+        jax.random.randint(jax.random.fold_in(key, 100 + i),
+                           (topo[i + 1],), vth_lo, vth_hi, jnp.int32)
+        for i in range(n_tiles)
+    ]
+    off = jax.random.normal(jax.random.fold_in(key, 999), (topo[-1],))
+    return EsamNetwork(weight_bits=bits, vth=vth, out_offset=off)
+
+
+TOPO = (256, 128, 128, 10)          # 128-aligned: every mode can run it
+
+
+def _spikes(key, n=9, width=TOPO[0]):
+    return jax.random.bernoulli(key, 0.35, (n, width))
+
+
+# ----------------------------------------------------------------------- #
+# mask generation: determinism, disjointness, scaling
+# ----------------------------------------------------------------------- #
+def test_masks_deterministic_under_seed():
+    fm = FaultModel(seed=11, stuck0_rate=0.1, stuck1_rate=0.05,
+                    vth_sigma=1.5, read_disturb=0.02)
+    m1 = fm.build_masks(TOPO, (1, 4))
+    m2 = fm.build_masks(TOPO, (1, 4))
+    for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m3 = dataclasses.replace(fm, seed=12).build_masks(TOPO, (1, 4))
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m3))
+    )
+
+
+def test_stuck_masks_disjoint_and_rates_plausible():
+    fm = FaultModel(seed=0, stuck0_rate=0.2, stuck1_rate=0.2)
+    m = fm.build_masks(TOPO)
+    for s0, s1 in zip(m["stuck0"], m["stuck1"]):
+        assert not bool(jnp.any(s0 & s1))
+        rate0 = float(jnp.mean(s0))
+        rate1 = float(jnp.mean(s1))
+        assert abs(rate0 - 0.2) < 0.05 and abs(rate1 - 0.2) < 0.05
+
+
+def test_upset_rate_scales_with_ports_and_vprech():
+    fm = FaultModel(seed=0, read_disturb=0.01)
+    assert fm.upset_rate(4) == pytest.approx(4 * fm.upset_rate(1))
+    hot = dataclasses.replace(fm, v_prech=2 * cm.VPRECH)
+    assert hot.upset_rate(1) == pytest.approx(4 * fm.upset_rate(1))
+    assert FaultModel(read_disturb=1.0).upset_rate(4) == 1.0  # clipped
+    # nested draws: the 1-port upset set is a subset of the 4-port set
+    m = fm.build_masks(TOPO, (1, 4))
+    for u1, u4 in zip(m["upset"][1], m["upset"][4]):
+        assert bool(jnp.all(~u1 | u4))
+        assert int(u4.sum()) > int(u1.sum())
+
+
+# ----------------------------------------------------------------------- #
+# zero-fault bit-identity: the acceptance-criteria property, all 5 modes
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["functional", "packed", "prefix", "cycle",
+                                  "temporal"])
+def test_zero_rate_faults_bit_identical_to_clean(mode):
+    """A FaultModel with every rate at 0 runs the full mask datapath and
+    still lands bit-identical to the ``faults=None`` clean plan."""
+    net = _rand_net(jax.random.PRNGKey(1), TOPO)
+    s = _spikes(jax.random.PRNGKey(2))
+    kw = {}
+    if mode in ("packed", "prefix"):
+        kw["interpret"] = True
+    if mode == "temporal":
+        kw.update(temporal=TemporalConfig(n_steps=2, leak=0.25),
+                  interpret=True)
+        s = jnp.stack([s, s[::-1]])
+    fm0 = FaultModel(seed=9)
+    assert not fm0.any_faults
+    a = net.plan(mode=mode, telemetry=True, faults=fm0, **kw)(s)
+    b = net.plan(mode=mode, telemetry=True, **kw)(s)
+    for name in ("logits", "prefix"):
+        va, vb = getattr(a, name), getattr(b, name)
+        assert (va is None) == (vb is None)
+        if va is not None:
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+    for la, lb in zip(a.loads, b.loads):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ----------------------------------------------------------------------- #
+# faulted datapath: mode equivalence + semantics
+# ----------------------------------------------------------------------- #
+def test_faulted_modes_agree_and_differ_from_clean():
+    """Faulted weights are just different weights: functional == packed ==
+    cycle == temporal(T=1) under the same FaultModel, and != the clean
+    logits at a non-trivial rate."""
+    net = _rand_net(jax.random.PRNGKey(3), TOPO)
+    s = _spikes(jax.random.PRNGKey(4))
+    fm = FaultModel(seed=5, stuck0_rate=0.08, stuck1_rate=0.06,
+                    vth_sigma=1.0, read_disturb=0.01)
+    clean = np.asarray(net.plan(mode="functional")(s).logits)
+    f_fun = np.asarray(net.plan(mode="functional", faults=fm)(s).logits)
+    f_pk = np.asarray(
+        net.plan(mode="packed", faults=fm, interpret=True)(s).logits)
+    f_cy = np.asarray(net.plan(mode="cycle", faults=fm)(s).logits)
+    f_tmp = np.asarray(net.plan(
+        mode="temporal", faults=fm, interpret=True,
+        temporal=TemporalConfig(n_steps=1))(s[None]).logits)
+    np.testing.assert_array_equal(f_fun, f_pk)
+    np.testing.assert_array_equal(f_fun, f_cy)
+    np.testing.assert_array_equal(f_fun, f_tmp)
+    assert not np.array_equal(f_fun, clean)
+
+
+def test_stuck_at_semantics_extreme_rates():
+    """stuck1_rate=1 reads every cell as '1' (+1 weights) regardless of the
+    stored bits; stuck0_rate=1 reads all '0' (-1 weights)."""
+    net = _rand_net(jax.random.PRNGKey(6), (64, 32, 10))
+    s = _spikes(jax.random.PRNGKey(7), n=5, width=64)
+    for rate_field, bit in (("stuck1_rate", 1), ("stuck0_rate", 0)):
+        fm = FaultModel(seed=0, **{rate_field: 1.0})
+        forced = EsamNetwork(
+            weight_bits=[jnp.full_like(w, bit) for w in net.weight_bits],
+            vth=net.vth, out_offset=net.out_offset)
+        got = net.plan(mode="functional", faults=fm)(s).logits
+        want = forced.plan(mode="functional")(s).logits
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cycle_sweep_faults_scale_with_port_option():
+    """In the one-executable port sweep, each cell option reads through its
+    own port count, so read-disturb injects more upsets at 4R than 1R."""
+    net = _rand_net(jax.random.PRNGKey(8), TOPO)
+    s = _spikes(jax.random.PRNGKey(9))
+    fm = FaultModel(seed=1, read_disturb=0.02)
+    sweep = net.plan(mode="cycle", read_ports=(0, 1, 4), faults=fm)(s).sweep
+    # 0 and 1 share the single effective port -> identical logits
+    np.testing.assert_array_equal(np.asarray(sweep[0]["logits"]),
+                                  np.asarray(sweep[1]["logits"]))
+    assert not np.array_equal(np.asarray(sweep[1]["logits"]),
+                              np.asarray(sweep[4]["logits"]))
+
+
+# ----------------------------------------------------------------------- #
+# mitigation 1: column remapping onto spares
+# ----------------------------------------------------------------------- #
+def test_remap_full_budget_restores_clean_datapath():
+    net = _rand_net(jax.random.PRNGKey(10), TOPO)
+    s = _spikes(jax.random.PRNGKey(11))
+    clean = np.asarray(net.plan(mode="functional")(s).logits)
+    fm = FaultModel(seed=13, dead_col_rate=0.15)
+    faulted = np.asarray(net.plan(mode="functional", faults=fm)(s).logits)
+    assert not np.array_equal(faulted, clean)
+    # enough spares to absorb every dead column -> bit-identical to clean
+    fm_remap = dataclasses.replace(fm, spare_cols=64)
+    remapped = np.asarray(
+        net.plan(mode="functional", faults=fm_remap)(s).logits)
+    np.testing.assert_array_equal(remapped, clean)
+
+
+def test_remap_partial_budget_clears_worst_columns():
+    fm = FaultModel(seed=3, dead_col_rate=0.2, stuck0_rate=0.01)
+    k = 4
+    fm_remap = dataclasses.replace(fm, spare_cols=k)
+    m0 = fm.build_masks(TOPO)
+    m1 = fm_remap.build_masks(TOPO)
+    for s0_a, s0_b in zip(m0["stuck0"], m1["stuck0"]):
+        col_a = np.asarray(s0_a.sum(0))
+        col_b = np.asarray(s0_b.sum(0))
+        cleared = np.nonzero((col_a > 0) & (col_b == 0))[0]
+        assert len(cleared) == k                     # exactly the budget
+        # the cleared columns were the worst-scoring ones
+        assert col_a[cleared].min() >= np.sort(col_a)[-k:].min() or (
+            col_a[cleared].min() >= np.partition(col_a, -k)[-k])
+    assert sum(faults_mod.faulty_cells(m1)) < sum(faults_mod.faulty_cells(m0))
+
+
+def test_spare_column_area_overhead():
+    a0 = cm.spare_column_area_um2(cm.PAPER_TOPOLOGY, 0, 4)
+    a8 = cm.spare_column_area_um2(cm.PAPER_TOPOLOGY, 8, 4)
+    a16 = cm.spare_column_area_um2(cm.PAPER_TOPOLOGY, 16, 4)
+    assert a0 == 0.0 and a16 == pytest.approx(2 * a8)
+    # spares pay the chosen cell option's area ratio
+    assert cm.spare_column_area_um2(cm.PAPER_TOPOLOGY, 8, 0) < a8
+
+
+# ----------------------------------------------------------------------- #
+# mitigation 2: online-learning repair around dead columns
+# ----------------------------------------------------------------------- #
+def test_stdp_repair_recovers_accuracy_around_dead_columns():
+    from repro.train import online as online_train
+
+    key = jax.random.PRNGKey(0)
+    # 10 prototype spike patterns + flip noise: a cleanly separable task so
+    # the recovery margin is large and deterministic
+    protos = jax.random.bernoulli(jax.random.fold_in(key, 50), 0.35,
+                                  (10, 768))
+
+    def make_split(k, n):
+        y = jax.random.randint(jax.random.fold_in(k, 0), (n,), 0, 10)
+        flips = jax.random.bernoulli(jax.random.fold_in(k, 1), 0.03,
+                                     (n, 768))
+        return jnp.logical_xor(protos[y], flips), y
+
+    x_tr, y_tr = make_split(jax.random.fold_in(key, 60), 360)
+    x_te, y_te = make_split(jax.random.fold_in(key, 61), 120)
+    topo = (768, 64, 10)
+    bits = [jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                                 (topo[i], topo[i + 1])).astype(jnp.int8)
+            for i in range(2)]
+    vth = [jax.random.randint(jax.random.fold_in(key, 5), (64,), 0, 12,
+                              jnp.int32),
+           jnp.full((10,), 2 ** 30, jnp.int32)]
+    net = EsamNetwork(weight_bits=bits, vth=vth,
+                      out_offset=jnp.zeros((10,)))
+
+    # deploy with 30% of the hidden columns dead, readout unadapted
+    fm = FaultModel(seed=7, dead_col_rate=0.3)
+    acc_fault = float((jnp.argmax(
+        net.plan(mode="functional", faults=fm)(x_te).logits, -1)
+        == y_te).mean())
+    res = online_train.train_online(
+        net, x_tr, y_tr, epochs=3, interpret=True, shuffle=True,
+        eval_spikes=x_te, eval_labels=y_te, faults=fm)
+    # STDP re-learns the readout around the dead columns: accuracy
+    # recovered per epoch, far above the unrepaired faulted baseline
+    assert res.accuracy[-1] > acc_fault + 0.3
+    assert res.accuracy[-1] > 0.5
+    # ...and the reported accuracy is exactly what the deployed faulted
+    # plan achieves on the programmed bits (clamp consistency)
+    deployed = float((jnp.argmax(
+        res.network.plan(mode="functional", faults=fm)(x_te).logits, -1)
+        == y_te).mean())
+    assert deployed == pytest.approx(res.accuracy[-1], abs=1e-6)
+
+
+def test_clamp_readout_writes_to_stuck_cells_do_not_take():
+    fm = FaultModel(seed=2, stuck0_rate=0.3, stuck1_rate=0.2)
+    masks = fm.build_masks((64, 32, 10))
+    bits_t = jnp.ones((10, 32), jnp.int8)        # try to program all-1
+    eff = faults_mod.clamp_readout_t(bits_t, masks, 4)
+    s0 = np.asarray(masks["stuck0"][-1].T)
+    assert bool(jnp.all(jnp.where(s0, eff == 0, eff == 1)))
+
+
+# ----------------------------------------------------------------------- #
+# mitigation 3: fault-aware serving
+# ----------------------------------------------------------------------- #
+def _serve_net(key):
+    # vth 0: ~half the hidden neurons fire, near the calibration profile
+    net = _rand_net(key, (128, 128, 10), vth_lo=0, vth_hi=1)
+    return net
+
+
+def test_engine_health_scores_degraded_tiles():
+    from repro.serve.engine import SpikeEngine, SpikeRequest
+
+    net = _serve_net(jax.random.PRNGKey(20))
+    s = np.asarray(_spikes(jax.random.PRNGKey(21), n=16, width=128),
+                   dtype=np.uint8)
+    # stuck-at-1 floods the hidden tile with spikes -> load inflation on the
+    # downstream tile -> measured cycles deviate from calibration
+    fm = FaultModel(seed=4, stuck1_rate=0.7)
+    clean = SpikeEngine(net, interpret=True, telemetry=True, max_batch=16)
+    bad = SpikeEngine(net, interpret=True, telemetry=True, max_batch=16,
+                      faults=fm)
+    clean.serve([SpikeRequest(spikes=row) for row in s])
+    bad.serve([SpikeRequest(spikes=row) for row in s])
+    assert clean.health() > bad.health()
+    assert bad.health() < 0.5
+    st = bad.stats()
+    assert st["faulted"] and st["degraded"]
+    assert st["tile_health"] == [float(h) for h in bad.tile_health()]
+    # before any traffic, health is the well-defined optimistic 1.0
+    idle = SpikeEngine(net, interpret=True, telemetry=True)
+    assert idle.health() == 1.0
+
+
+def test_router_drains_traffic_around_degraded_engine():
+    from repro.serve.engine import FaultAwareRouter, SpikeEngine, SpikeRequest
+
+    net = _serve_net(jax.random.PRNGKey(22))
+    s = np.asarray(_spikes(jax.random.PRNGKey(23), n=12, width=128),
+                   dtype=np.uint8)
+    clean = SpikeEngine(net, interpret=True, telemetry=True, max_batch=16)
+    bad = SpikeEngine(net, interpret=True, telemetry=True, max_batch=16,
+                      faults=FaultModel(seed=4, stuck1_rate=0.7))
+    # calibration traffic so health reflects the fault
+    clean.serve([SpikeRequest(spikes=row) for row in s])
+    bad.serve([SpikeRequest(spikes=row) for row in s])
+    thr = (clean.health() + bad.health()) / 2
+    router = FaultAwareRouter([clean, bad], health_threshold=thr)
+    out = router.serve([SpikeRequest(spikes=row) for row in s])
+    assert router.routed == [len(s), 0]
+    assert all(r.logits is not None for r in out)
+    rst = router.stats()
+    assert rst["engines"][1]["degraded"] and not rst["engines"][0]["degraded"]
+    # all replicas degraded -> falls back to the healthiest, never stalls
+    router_all_bad = FaultAwareRouter([bad], health_threshold=0.99)
+    out2 = router_all_bad.serve([SpikeRequest(spikes=s[0])])
+    assert out2[0].logits is not None
+    assert router_all_bad.routed == [1]
+
+
+def test_engine_watchdog_flags_slow_rounds_in_stats():
+    from repro.serve.engine import SpikeEngine, SpikeRequest
+    from repro.train.fault_tolerance import StragglerWatchdog
+
+    net = _serve_net(jax.random.PRNGKey(24))
+    s = np.asarray(_spikes(jax.random.PRNGKey(25), n=24, width=128),
+                   dtype=np.uint8)
+    # threshold 0 => every post-warmup round is a straggler (deterministic)
+    eng = SpikeEngine(net, interpret=True, max_batch=8,
+                      watchdog=StragglerWatchdog(threshold=0.0,
+                                                 warmup_steps=1))
+    eng.serve([SpikeRequest(spikes=row) for row in s])
+    st = eng.stats()
+    assert st["dispatch_rounds"] == 3
+    assert st["straggler_rounds"] == 2                 # rounds after warmup
+
+
+def test_engine_replan_degraded_serves_and_reports_spares():
+    from repro.serve.engine import SpikeEngine, SpikeRequest
+
+    net = _serve_net(jax.random.PRNGKey(26))
+    s = np.asarray(_spikes(jax.random.PRNGKey(27), n=6, width=128),
+                   dtype=np.uint8)
+    eng = SpikeEngine(net, interpret=True, telemetry=True, max_batch=8)
+    before = eng.serve([SpikeRequest(spikes=row) for row in s])
+    plan = eng.replan_degraded(1)      # single surviving device
+    assert plan == ((1, 1), ("data", "model")) and plan.dropped_chips == 0
+    after = eng.serve([SpikeRequest(spikes=row) for row in s])
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a.logits, b.logits)
+    assert eng.stats()["n_requests"] == 2 * len(s)

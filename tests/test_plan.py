@@ -336,6 +336,25 @@ for i, r in enumerate(reqs):
     np.testing.assert_array_equal(r.logits, np.asarray(single.logits[i]))
 st = eng.stats()
 assert st["n_requests"] == 11 and st["data_parallel"] == 8
+
+# faulted plan, dp-sharded: the counter-based fault masks are built on the
+# host from the topology alone, so the sharded executable must be
+# bit-identical to the faulted single-device one (and differ from clean)
+from repro.core.esam.faults import FaultModel
+fm = FaultModel(seed=3, stuck0_rate=0.02, stuck1_rate=0.02,
+                vth_sigma=1.0, read_disturb=1e-3)
+f_single = net.plan(mode="packed", telemetry=True, interpret=True,
+                    faults=fm)(s)
+f_dp = net.plan(mode="packed", telemetry=True, interpret=True,
+                faults=fm, rules=dp_rules)(s)
+np.testing.assert_array_equal(np.asarray(f_dp.logits),
+                              np.asarray(f_single.logits))
+for a, b in zip(f_dp.loads, f_single.loads):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert not np.array_equal(np.asarray(f_dp.logits), np.asarray(single.logits))
+f_fn = net.plan(mode="functional", faults=fm, rules=dp_rules)(s)
+np.testing.assert_array_equal(np.asarray(f_fn.logits),
+                              np.asarray(f_single.logits))
 print("SHARDED_IDENTITY_OK")
 """
 
