@@ -7,10 +7,18 @@ traffic and records, per configuration:
   * wall-clock serving rate (requests/s) on this host,
   * the modeled hardware operating point in paper units — pipelined MInf/s
     and pJ/Inf from the device-resident telemetry accumulators,
+  * open-loop lanes (seeded Poisson arrivals below and above saturation
+    plus a request storm): p50/p99/p99.9 latency, shed / rejected counts,
+    and goodput-under-SLO through the overload-hardened plane (bounded
+    queue, deadlines, degradation ladder),
+  * a chaos lane: two replicas behind the retrying ``FaultAwareRouter``
+    with one crashed mid-drain and one slowed — completion accounting and
+    retry counts,
 
 into ``BENCH_serving.json`` (override with env BENCH_SERVING_OUT).  Run
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise
-the data-parallel plan on CPU.
+the data-parallel plan on CPU; set ``BENCH_SERVING_SMOKE=1`` for the small
+CI configuration.
 """
 
 from __future__ import annotations
@@ -82,6 +90,102 @@ def _serve_once(rec: Recorder, tag: str, net, reqs_np, rules) -> None:
     )
 
 
+SMOKE = bool(os.environ.get("BENCH_SERVING_SMOKE"))
+
+
+def _overload_lanes(rec: Recorder, net) -> None:
+    """Open-loop Poisson lanes below and above saturation + a chaos lane.
+
+    The over-saturation lane adds a request storm against a bounded queue,
+    so sheds/rejections are structurally guaranteed (the CI overload smoke
+    asserts ``shed_total > 0``), and the deadline turns queue growth into
+    deadline sheds rather than unbounded latency.
+    """
+    from repro.serve.overload import DegradationLadder
+    from repro.serve.traffic import ChaosConfig, TrafficConfig, run_open_loop
+    from repro.train.fault_tolerance import RetryPolicy
+
+    n = 48 if SMOKE else 160
+    max_batch = 32
+    queue_limit = 2 * max_batch
+    n_in = net.topology[0]
+
+    def mk(queue_limit=queue_limit):
+        return SpikeEngine(net, max_batch=max_batch, telemetry=True,
+                           queue_limit=queue_limit,
+                           ladder=DegradationLadder.default(max_batch))
+
+    # closed-loop warm pass + sustainable-rate measurement on an unbounded
+    # engine, so the lane rates are anchored at this host's actual
+    # saturation point.  Warm every bucket in the ladder: open-loop rounds
+    # can be as small as one request, and an unwarmed small bucket would
+    # charge its compile to the first lane round (shedding everything
+    # behind it on the deadline).
+    blend = dict(n_requests=n, p_event=0.0, n_in=n_in)
+    warm = mk(queue_limit=None)
+    from repro.serve.traffic import build_requests
+    for b in warm._buckets:
+        warm.serve(build_requests(
+            TrafficConfig(rate_hz=1.0, n_requests=b, seed=21, p_event=0.0,
+                          n_in=n_in))[0])
+    timed = build_requests(TrafficConfig(rate_hz=1.0, seed=22, **blend))[0]
+    t0 = time.perf_counter()
+    warm.serve(timed)
+    rate_sust = len(timed) / (time.perf_counter() - t0)
+    # ~48 requests' worth of service: comfortably above one open-loop
+    # drain's latency floor, so goodput separates the lanes (≈1 under
+    # saturation, <1 over it) instead of reading 0 everywhere
+    deadline_s = 48.0 / rate_sust
+    slo_s = deadline_s
+
+    lanes = [
+        ("under", 0.5 * rate_sust, None),
+        ("over", 2.0 * rate_sust,
+         ChaosConfig(storm_at_s=0.0, storm_size=3 * queue_limit)),
+    ]
+    for tag, rate, chaos in lanes:
+        eng = mk()
+        cfg = TrafficConfig(rate_hz=rate, seed=23, deadline_s=deadline_s,
+                            **blend)
+        rep = run_open_loop(eng, cfg, slo_s=slo_s, chaos=chaos)
+        shed_total = rep.n_shed + rep.n_rejected
+        rec.emit(
+            f"serving_openloop_{tag}", rep.p99_ms * 1e3,
+            f"rate_hz={rate:.0f};sustainable_hz={rate_sust:.0f};"
+            f"offered={rep.n_offered};completed={rep.n_completed};"
+            f"p50_ms={rep.p50_ms:.2f};p99_ms={rep.p99_ms:.2f};"
+            f"p999_ms={rep.p999_ms:.2f};goodput_slo={rep.goodput_slo:.3f};"
+            f"slo_ms={1e3 * slo_s:.1f};deadline_ms={1e3 * deadline_s:.1f};"
+            f"shed={rep.n_shed};rejected={rep.n_rejected};"
+            f"shed_total={shed_total};"
+            f"backpressure={rep.backpressure_events};"
+            f"ladder_transitions={rep.ladder_transitions};"
+            f"max_degradation_level={rep.max_degradation_level}",
+        )
+
+    # chaos lane: replica 0 crashes mid-drain, replica 1 runs 10x slowed —
+    # the router's retry/backoff path must complete every admitted request
+    engines = [mk(queue_limit=None), mk(queue_limit=None)]
+    from repro.serve.engine import FaultAwareRouter
+    router = FaultAwareRouter(
+        engines, retry=RetryPolicy(max_attempts=4, base_backoff_s=1e-4,
+                                   seed=5))
+    chaos = ChaosConfig(slowdown=((1, 2e-3),), crash_replica=0,
+                        crash_after_rounds=1)
+    cfg = TrafficConfig(rate_hz=2.0 * rate_sust, seed=29, **blend)
+    rep = run_open_loop(router, cfg, chaos=chaos)
+    lost = rep.n_offered - (rep.n_completed + rep.n_shed + rep.n_rejected
+                            + rep.n_failed)
+    assert lost == 0, f"chaos lane lost {lost} requests"
+    rec.emit(
+        "serving_chaos", rep.p99_ms * 1e3,
+        f"offered={rep.n_offered};completed={rep.n_completed};"
+        f"retries={rep.retries};crashes={rep.crashes};"
+        f"timeouts={rep.timeouts};failed={rep.n_failed};lost={lost};"
+        f"p99_ms={rep.p99_ms:.2f}",
+    )
+
+
 def run():
     rec = Recorder()
     net = _paper_net()
@@ -96,6 +200,8 @@ def run():
         rec.emit("serving_sharded_skipped", 0.0,
                  "devices=1(set XLA_FLAGS=--xla_force_host_platform_"
                  "device_count=8 for the data-parallel lane)")
+
+    _overload_lanes(rec, net)
 
     rec.write_json(os.environ.get("BENCH_SERVING_OUT", "BENCH_serving.json"))
 

@@ -13,6 +13,16 @@ operating point (MInf/s + pJ/Inf) next to the wall-clock serving rate.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --esam --smoke
+
+Traffic mode (``--traffic``): open-loop Poisson traffic (seeded arrivals,
+mixed static/event blends) through the overload-hardened plane — bounded
+admission queue, per-request deadlines, the degradation ladder, and (with
+``--replicas N``) the retrying ``FaultAwareRouter``; ``--chaos`` arms a
+canned chaos plan (replica 0 crashes mid-drain, replica 1 slowed).  Prints
+p50/p99/p99.9 latency, shed/rejected/retry counts, and goodput-under-SLO.
+
+    PYTHONPATH=src python -m repro.launch.serve --traffic --smoke \
+        --rate 2000 --requests 64 --deadline-ms 500 --replicas 2
 """
 
 from __future__ import annotations
@@ -161,6 +171,83 @@ def _events_main(args):
     assert all(r.label is not None for r in reqs)
 
 
+def _traffic_main(args):
+    """Open-loop Poisson traffic (optionally chaos-injected) through the
+    overload-hardened serving plane, printing the SLO-facing numbers."""
+    from repro.core.esam import cost_model as cm
+    from repro.serve.engine import FaultAwareRouter, SpikeEngine
+    from repro.serve.overload import DegradationLadder
+    from repro.serve.traffic import ChaosConfig, TrafficConfig, run_open_loop
+    from repro.train.fault_tolerance import RetryPolicy
+
+    topology = (768, 256, 10) if args.smoke else cm.PAPER_TOPOLOGY
+    n_requests = args.requests if args.requests is not None else (
+        64 if args.smoke else 256)
+    max_batch = 32 if args.batch_size is None else args.batch_size
+    net = _random_esam_network(topology, args.seed)
+
+    def make_engine():
+        return SpikeEngine(
+            net, max_batch=max_batch, telemetry=True,
+            read_ports=args.read_ports, queue_limit=4 * max_batch,
+            ladder=DegradationLadder.default(max_batch, args.read_ports))
+
+    # closed-loop warmup on the same request blend: first pass compiles
+    # every (bucket, T) the traffic can hit, second pass measures the
+    # sustainable rate, so --rate defaults land relative to saturation
+    from repro.serve.traffic import build_requests
+    warm = make_engine()
+    blend = dict(rate_hz=1.0, n_requests=n_requests, p_event=args.p_event,
+                 event_t_choices=(2, 4), n_in=topology[0])
+    warm.serve(build_requests(TrafficConfig(seed=args.seed, **blend))[0])
+    timed = build_requests(TrafficConfig(seed=args.seed + 1, **blend))[0]
+    t0 = time.perf_counter()
+    warm.serve(timed)
+    rate_sust = len(timed) / (time.perf_counter() - t0)
+    rate = args.rate if args.rate is not None else 2.0 * rate_sust
+
+    engines = [make_engine() for _ in range(max(1, args.replicas))]
+    # health_threshold=0: a random network's measured telemetry deviates
+    # from the reference calibration, so tile-health routing would mark
+    # every replica degraded and starve all but one — this lane exercises
+    # the overload plane (crash/retry/deadlines), not health scoring
+    server = engines[0] if len(engines) == 1 else FaultAwareRouter(
+        engines, health_threshold=0.0,
+        retry=RetryPolicy(base_backoff_s=1e-3, attempt_timeout_s=2.0))
+    chaos = None
+    if args.chaos:
+        chaos = ChaosConfig(
+            slowdown=((1, 5e-3),) if len(engines) > 1 else (),
+            crash_replica=0 if len(engines) > 1 else None,
+            crash_after_rounds=2,
+            storm_at_s=0.0, storm_size=2 * max_batch)
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
+    slo_s = args.slo_ms / 1e3 if args.slo_ms else deadline_s
+    cfg = TrafficConfig(
+        rate_hz=rate, n_requests=n_requests, seed=args.seed,
+        p_event=args.p_event, event_t_choices=(2, 4),
+        n_in=topology[0], deadline_s=deadline_s)
+    rep = run_open_loop(server, cfg, slo_s=slo_s, chaos=chaos)
+
+    print(f"esam-traffic: offered {rep.n_offered} requests @ {rate:,.0f}/s "
+          f"(sustainable ~{rate_sust:,.0f}/s, replicas={len(engines)}, "
+          f"chaos={'on' if chaos else 'off'})")
+    print(f"  completed         : {rep.n_completed}  "
+          f"(shed {rep.n_shed}, rejected {rep.n_rejected}, "
+          f"failed {rep.n_failed}, deadline-miss {rep.n_deadline_miss})")
+    print(f"  latency           : p50 {rep.p50_ms:8.1f} ms   "
+          f"p99 {rep.p99_ms:8.1f} ms   p99.9 {rep.p999_ms:8.1f} ms")
+    print(f"  goodput under SLO : {100 * rep.goodput_slo:6.1f} %  "
+          f"(SLO {1e3 * rep.slo_s:.0f} ms)" if rep.slo_s else
+          f"  goodput           : {100 * rep.goodput_slo:6.1f} %")
+    print(f"  resilience        : retries {rep.retries}, "
+          f"crashes {rep.crashes}, timeouts {rep.timeouts}, "
+          f"degraded routes {rep.degraded_routes}")
+    print(f"  degradation       : {rep.ladder_transitions} transitions, "
+          f"deepest level {rep.max_degradation_level}; "
+          f"backpressure events {rep.backpressure_events}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -168,6 +255,24 @@ def main():
                     help="serve ESAM spike traffic through the sharded plan")
     ap.add_argument("--events", action="store_true",
                     help="serve ESAM event-stream traffic (temporal plan)")
+    ap.add_argument("--traffic", action="store_true",
+                    help="open-loop Poisson traffic through the "
+                         "overload-hardened plane (deadlines, ladder, "
+                         "retries); see also --chaos/--replicas")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="--traffic: offered arrival rate in req/s "
+                         "(default: 2x the measured sustainable rate)")
+    ap.add_argument("--deadline-ms", type=float, default=250.0,
+                    help="--traffic: per-request deadline (0 disables)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="--traffic: goodput SLO (default: the deadline)")
+    ap.add_argument("--p-event", type=float, default=0.25,
+                    help="--traffic: fraction of event-stream requests")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="--traffic: engine replicas behind the router")
+    ap.add_argument("--chaos", action="store_true",
+                    help="--traffic: crash replica 0 mid-drain, slow "
+                         "replica 1, and inject a request storm")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=None,
                     help="default: 4 (LM), 64 (--esam --smoke), 512 (--esam), "
@@ -180,7 +285,9 @@ def main():
                     help="--events: LIF leak per timestep")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    if args.events:
+    if args.traffic:
+        _traffic_main(args)
+    elif args.events:
         _events_main(args)
     elif args.esam:
         _esam_main(args)

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.distributed import sharding as shd
 from repro.models import lm
+from repro.serve.overload import AdmissionVerdict, DegradationLadder
 from repro.train import fault_tolerance as ft
 
 
@@ -114,6 +115,13 @@ class Engine:
 @dataclasses.dataclass
 class SpikeRequest:
     spikes: np.ndarray                     # {0,1}[n_in] (any dtype)
+    # overload plane (optional): absolute deadline in the engine's clock —
+    # requests still queued past it are shed instead of dispatched
+    deadline_s: Optional[float] = None
+    # lifecycle: "pending" -> "done" | "shed" (deadline) | "rejected"
+    # (bounded queue full) | "failed" (router retry budget exhausted)
+    status: str = "pending"
+    attempts: int = 0                      # router retry count
     # filled by the engine:
     logits: Optional[np.ndarray] = None    # float32[n_classes]
     label: Optional[int] = None            # argmax readout
@@ -133,9 +141,15 @@ class EventRequest:
     """
 
     events: np.ndarray
+    # overload plane (optional): see SpikeRequest
+    deadline_s: Optional[float] = None
+    status: str = "pending"
+    attempts: int = 0
     # filled by the engine:
     logits: Optional[np.ndarray] = None    # float32[n_classes]
     label: Optional[int] = None            # argmax readout
+    served_steps: Optional[int] = None     # timesteps actually served (the
+    #                                        ladder may truncate the stream)
     # filled when the engine runs with telemetry (paper-unit hardware cost):
     cycles: Optional[int] = None           # CIM cycles, summed over T steps
     latency_ns: Optional[float] = None     # cycles * cell clock period
@@ -199,6 +213,11 @@ class SpikeEngine:
                  watchdog: Optional[ft.StragglerWatchdog] = None,
                  health_threshold: float = 0.75,
                  rules: Optional[shd.ShardingRules] = None,
+                 queue_limit: Optional[int] = None,
+                 high_water: Optional[int] = None,
+                 ladder: Optional[DegradationLadder] = None,
+                 clock=time.monotonic,
+                 round_hook=None,
                  batch_size: Optional[int] = None):
         from repro.core import packing
         from repro.core.esam import cost_model as cm
@@ -224,6 +243,39 @@ class SpikeEngine:
         # surfaced through stats() so a coordinator can drain traffic away
         self._watchdog = watchdog or ft.StragglerWatchdog()
         self._rounds = 0
+        # ---- overload plane -------------------------------------------- #
+        # bounded admission: submit() rejects past queue_limit; high-water
+        # mark (default: half the limit) turns verdicts into backpressure
+        self._clock = clock
+        self._queue_limit = queue_limit
+        if high_water is None and queue_limit is not None:
+            high_water = max(1, queue_limit // 2)
+        self._high_water = high_water
+        # graceful-degradation ladder state (None => pinned to full service)
+        self._ladder = ladder
+        self._ladder_level = 0
+        self._pressure_streak = 0
+        self._clear_streak = 0
+        self._ladder_flagged_seen = 0
+        self._transitions: list[dict] = []
+        # chaos/observability hook: called with the round index before each
+        # dispatch round (inside the watchdog-timed section) — a raising hook
+        # models a replica crashing mid-drain
+        self.round_hook = round_hook
+        # overload counters (all surfaced through stats())
+        self._shed_deadline = 0
+        self._rejected_full = 0
+        self._backpressure_events = 0
+        # per-round host-sync/dispatch observability (satellite for the dp8
+        # serving regression): pack vs dispatch host time, padded-vs-real
+        # rows per bucket — aggregates only, O(1) per round
+        self._round_counters = {
+            "rounds_static": 0, "rounds_event": 0,
+            "rows_real": 0, "rows_padded": 0,
+            "host_pack_s": 0.0, "dispatch_s": 0.0,
+        }
+        self._rounds_per_bucket: dict[int, int] = {}
+        self._padded_rows_per_bucket: dict[int, int] = {}
         # LIF dynamics template for event-stream requests; n_steps is taken
         # from each request (per-request T), the rest from this config.  The
         # default (zero leak, zero reset) makes a T=1 event request
@@ -272,25 +324,53 @@ class SpikeEngine:
     # -------------------------------------------------------------- #
     # admission + dispatch
     # -------------------------------------------------------------- #
-    def submit(self, requests) -> None:
+    def queue_depth(self) -> int:
+        """Requests currently admitted and awaiting dispatch (both queues)."""
+        return len(self._pending) + len(self._pending_events)
+
+    def submit(self, requests):
         """Queue requests without dispatching (single request or list).
 
         ``SpikeRequest`` and ``EventRequest`` objects may be mixed; each is
-        routed to its own admission queue."""
-        if isinstance(requests, (SpikeRequest, EventRequest)):
+        routed to its own admission queue.  Returns an
+        :class:`~repro.serve.overload.AdmissionVerdict` per request (a single
+        verdict for a single request): with a bounded queue
+        (``queue_limit``) a full queue rejects the request (its ``status``
+        becomes ``"rejected"``, nothing is queued) and depth beyond the
+        high-water mark flags ``backpressure`` so a closed-loop caller can
+        slow down.  Unbounded engines always admit — callers that ignore the
+        verdict keep the pre-overload behavior.
+        """
+        single = isinstance(requests, (SpikeRequest, EventRequest))
+        if single:
             requests = [requests]
+        verdicts = []
         for r in requests:
+            depth = self.queue_depth()
+            if self._queue_limit is not None and depth >= self._queue_limit:
+                r.status = "rejected"
+                self._rejected_full += 1
+                verdicts.append(AdmissionVerdict(
+                    admitted=False, reason="queue_full", queue_depth=depth))
+                continue
             if isinstance(r, EventRequest):
                 self._pending_events.append(r)
             else:
                 self._pending.append(r)
+            depth += 1
+            bp = self._high_water is not None and depth > self._high_water
+            if bp:
+                self._backpressure_events += 1
+            verdicts.append(AdmissionVerdict(
+                admitted=True, backpressure=bp, queue_depth=depth))
+        return verdicts[0] if single else verdicts
 
-    def submit_events(self, requests) -> None:
+    def submit_events(self, requests):
         """Queue event-stream requests (single ``EventRequest`` or list)."""
         if isinstance(requests, EventRequest):
             requests = [requests]
         assert all(isinstance(r, EventRequest) for r in requests)
-        self._pending_events.extend(requests)
+        return self.submit(requests)
 
     def serve(self, requests=None) -> list:
         """Enqueue ``requests`` (optional), drain both queues, flush results.
@@ -302,30 +382,132 @@ class SpikeEngine:
             out = requests if isinstance(requests, list) else [requests]
         else:
             out = list(self._pending) + list(self._pending_events)
+        self._shed_expired()
         while self._pending:
-            round_reqs = self._pending[: self.max_batch]
-            del self._pending[: self.max_batch]
+            self._ladder_tick()
+            limit = self._round_limit()
+            round_reqs = self._pending[: limit]
+            del self._pending[: limit]
             self._timed_round(self._dispatch, round_reqs)
+            self._shed_expired()
         while self._pending_events:
             # one continuous-batching round per (batch, T) bucket: take the
-            # head request's T and everything sharing it, in arrival order
+            # head request's T and everything sharing it, in arrival order.
+            # A degraded ladder level caps T, so streams whose effective
+            # (truncated) T coincides share a round.
+            self._ladder_tick()
+            limit = self._round_limit()
+            t_cap = self._level().event_t_cap
             t = self._pending_events[0].n_steps
+            if t_cap is not None:
+                t = min(t, t_cap)
             round_reqs, rest = [], []
             for r in self._pending_events:
-                if r.n_steps == t and len(round_reqs) < self.max_batch:
+                eff = r.n_steps if t_cap is None else min(r.n_steps, t_cap)
+                if eff == t and len(round_reqs) < limit:
                     round_reqs.append(r)
                 else:
                     rest.append(r)
             self._pending_events = rest
             self._timed_round(self._dispatch_events, round_reqs, t)
+            self._shed_expired()
         self._flush()
         return out
+
+    # -------------------------------------------------------------- #
+    # overload plane: deadline shedding + degradation ladder
+    # -------------------------------------------------------------- #
+    def _shed_expired(self) -> None:
+        """Drop still-queued requests whose deadline already passed — they
+        would burn a device round only to be useless to the caller.  Shed
+        requests get ``status="shed"`` (logits stay None) and are counted in
+        ``stats()["shed_deadline"]``.  Requests without a deadline never
+        shed (the zero-pressure identity path)."""
+        now = None
+        for name in ("_pending", "_pending_events"):
+            queue = getattr(self, name)
+            if not any(r.deadline_s is not None for r in queue):
+                continue
+            if now is None:
+                now = self._clock()
+            keep = []
+            for r in queue:
+                if r.deadline_s is not None and now > r.deadline_s:
+                    r.status = "shed"
+                    self._shed_deadline += 1
+                else:
+                    keep.append(r)
+            setattr(self, name, keep)
+
+    def _level(self):
+        if self._ladder is None:
+            from repro.serve.overload import LadderLevel
+            return LadderLevel("full")
+        return self._ladder.level(self._ladder_level)
+
+    def _round_limit(self) -> int:
+        cap = self._level().bucket_cap
+        return self.max_batch if cap is None else max(1, min(self.max_batch,
+                                                             cap))
+
+    def _effective_read_ports(self) -> int:
+        ports = self._level().read_ports
+        return self.read_ports if ports is None else ports
+
+    def _ladder_tick(self) -> None:
+        """One pressure observation per dispatch round.  Pressure = queue
+        depth beyond the high-water mark OR the watchdog flagged the previous
+        round a straggler.  ``step_down_after`` pressured rounds in a row
+        move one level down; ``step_up_after`` clear rounds move back up.
+        Every transition is recorded (round index, levels, reason)."""
+        if self._ladder is None:
+            return
+        flagged = len(self._watchdog.flagged)
+        straggler = flagged > self._ladder_flagged_seen
+        self._ladder_flagged_seen = flagged
+        deep = (self._high_water is not None
+                and self.queue_depth() > self._high_water)
+        if deep or straggler:
+            self._pressure_streak += 1
+            self._clear_streak = 0
+            if (self._pressure_streak >= self._ladder.step_down_after
+                    and self._ladder_level < self._ladder.n_levels - 1):
+                self._record_transition(
+                    self._ladder_level + 1,
+                    "queue_depth" if deep else "straggler")
+                self._pressure_streak = 0
+        else:
+            self._clear_streak += 1
+            self._pressure_streak = 0
+            if (self._clear_streak >= self._ladder.step_up_after
+                    and self._ladder_level > 0):
+                self._record_transition(self._ladder_level - 1,
+                                        "pressure_cleared")
+                self._clear_streak = 0
+
+    def _record_transition(self, to_level: int, reason: str) -> None:
+        self._transitions.append({
+            "round": self._rounds,
+            "from_level": self._ladder_level,
+            "to_level": to_level,
+            "from": self._ladder.level(self._ladder_level).name,
+            "to": self._ladder.level(to_level).name,
+            "reason": reason,
+        })
+        self._ladder_level = to_level
 
     def _timed_round(self, dispatch, *args) -> None:
         """One dispatch round under the straggler watchdog: the host-side
         round wall time (packing + dispatch; device work stays async) feeds
-        the EMA, and slow rounds are flagged into ``stats()``."""
+        the EMA, and slow rounds are flagged into ``stats()``.  The chaos
+        hook runs inside the timed section — an injected stall inflates the
+        EMA exactly like a real straggler, and a raising hook aborts the
+        round before dispatch (the crash-mid-drain model: this round's
+        requests are popped but never served, which is what the router's
+        retry path recovers)."""
         t0 = time.perf_counter()
+        if self.round_hook is not None:
+            self.round_hook(self._rounds)
         dispatch(*args)
         self._watchdog.record(self._rounds, time.perf_counter() - t0)
         self._rounds += 1
@@ -336,36 +518,63 @@ class SpikeEngine:
                 return b
         return self._buckets[-1]
 
+    def _note_round(self, kind: str, bucket: int, n_real: int,
+                    pack_s: float, dispatch_s: float) -> None:
+        """Fold one round into the host-sync observability aggregates."""
+        c = self._round_counters
+        c[f"rounds_{kind}"] += 1
+        c["rows_real"] += n_real
+        c["rows_padded"] += bucket - n_real
+        c["host_pack_s"] += pack_s
+        c["dispatch_s"] += dispatch_s
+        self._rounds_per_bucket[bucket] = (
+            self._rounds_per_bucket.get(bucket, 0) + 1)
+        self._padded_rows_per_bucket[bucket] = (
+            self._padded_rows_per_bucket.get(bucket, 0) + bucket - n_real)
+
     def _dispatch(self, reqs: list[SpikeRequest]) -> None:
         """One continuous-batching round: pad to bucket, run the plan, keep
-        every result device-side (no host sync here)."""
+        every result device-side (no host sync here).  Host pack time and
+        dispatch-call time are recorded separately per bucket — the
+        observability needed to attribute dp-scaling regressions to host
+        sync vs tiny per-bucket dispatches."""
         bucket = self._bucket(len(reqs))
+        t0 = time.perf_counter()
         packed = jnp.asarray(self._packing.pack_padded_rows_np(
             [r.spikes for r in reqs], bucket, self.n_in))
+        t1 = time.perf_counter()
         res = self._plan(packed)
         rs = None
         if self.telemetry:
             # lazy device-side cost — nothing is synced inside the drain loop
             rs = self._cm.request_stats_device(
-                self.net.topology, res.loads, self.read_ports)
+                self.net.topology, res.loads, self._effective_read_ports())
+        t2 = time.perf_counter()
+        self._note_round("static", bucket, len(reqs), t1 - t0, t2 - t1)
         self._served += len(reqs)
         self._inflight.append((reqs, res.logits, rs))
 
     def _dispatch_events(self, reqs: list[EventRequest], n_steps: int) -> None:
         """One event round: same-T requests padded to a batch bucket and run
         through the temporal plan (compiled once per (batch, T) shape); the
-        stream cost stays device-side like the static path's."""
+        stream cost stays device-side like the static path's.  ``n_steps``
+        is the *effective* T — a degraded ladder level truncates longer
+        streams to it (recorded per request as ``served_steps``)."""
         bucket = self._bucket(len(reqs))
         width = self._packing.packed_width(self.n_in)
+        t0 = time.perf_counter()
         packed = np.zeros((n_steps, bucket, width), np.uint32)
         for i, r in enumerate(reqs):
             ev = np.asarray(r.events)
-            assert ev.shape[0] == n_steps, (ev.shape, n_steps)
+            assert ev.shape[0] >= n_steps, (ev.shape, n_steps)
+            r.served_steps = n_steps
             if ev.dtype == np.uint32 and ev.shape[-1] == width:
-                packed[:, i] = ev
+                packed[:, i] = ev[:n_steps]
             else:
-                assert ev.shape == (n_steps, self.n_in), (ev.shape, self.n_in)
-                packed[:, i] = self._packing.pack_spikes_np(ev != 0)
+                assert ev.shape[1:] == (self.n_in,), (ev.shape, self.n_in)
+                packed[:, i] = self._packing.pack_spikes_np(
+                    ev[:n_steps] != 0)
+        t1 = time.perf_counter()
         cfg = dataclasses.replace(self._temporal, n_steps=n_steps)
         plan = self.net.plan(
             mode="temporal", temporal=cfg, telemetry=self.telemetry,
@@ -374,7 +583,9 @@ class SpikeEngine:
         rs = None
         if self.telemetry:
             rs = self._cm.temporal_request_stats_device(
-                self.net.topology, res.loads, self.read_ports)
+                self.net.topology, res.loads, self._effective_read_ports())
+        t2 = time.perf_counter()
+        self._note_round("event", bucket, len(reqs), t1 - t0, t2 - t1)
         self._served_events += len(reqs)
         self._served_timesteps += len(reqs) * n_steps
         self._inflight.append((reqs, res.logits, rs))
@@ -392,6 +603,7 @@ class SpikeEngine:
             for i, r in enumerate(reqs):
                 r.logits = logits[i]
                 r.label = int(logits[i].argmax())
+                r.status = "done"
             if rs is not None:
                 cycles = np.asarray(rs["cycles"])
                 latency = np.asarray(rs["latency_ns"])
@@ -495,6 +707,31 @@ class SpikeEngine:
             "degraded": self.health() < self.health_threshold,
             "dispatch_rounds": self._rounds,
             "straggler_rounds": len(self._watchdog.flagged),
+            # overload plane: admission + deadline + degradation ladder
+            "queue_depth": self.queue_depth(),
+            "queue_limit": self._queue_limit,
+            "high_water": self._high_water,
+            "shed_deadline": self._shed_deadline,
+            "rejected_full": self._rejected_full,
+            "backpressure_events": self._backpressure_events,
+            "degradation_level": self._ladder_level,
+            "degradation_level_name": self._level().name,
+            "ladder_transitions": len(self._transitions),
+            "ladder_transition_log": list(self._transitions),
+            # per-round host-sync/dispatch observability (dp8 regression
+            # diagnosis): pack time vs dispatch-call time, pad overhead
+            "rounds_static": self._round_counters["rounds_static"],
+            "rounds_event": self._round_counters["rounds_event"],
+            "rows_real_total": self._round_counters["rows_real"],
+            "rows_padded_total": self._round_counters["rows_padded"],
+            "pad_fraction": (
+                self._round_counters["rows_padded"]
+                / max(1, self._round_counters["rows_real"]
+                      + self._round_counters["rows_padded"])),
+            "rounds_per_bucket": dict(self._rounds_per_bucket),
+            "padded_rows_per_bucket": dict(self._padded_rows_per_bucket),
+            "host_pack_s_total": self._round_counters["host_pack_s"],
+            "dispatch_s_total": self._round_counters["dispatch_s"],
             # event-stream aggregates (temporal plane)
             "n_event_requests": ne,
             "timesteps_total": nt,
@@ -528,62 +765,205 @@ class SpikeEngine:
 # ------------------------------------------------------------------ #
 # fault-aware routing across SpikeEngine replicas
 # ------------------------------------------------------------------ #
+class AllReplicasDownError(RuntimeError):
+    """Every replica has crashed — nothing can serve."""
+
+
+class AllReplicasDegradedError(RuntimeError):
+    """Every live replica is below the health threshold and the router was
+    built with ``on_all_degraded="raise"``."""
+
+
 class FaultAwareRouter:
-    """Drains spike traffic around degraded replicas.
+    """Drains spike traffic around degraded, stalled, and crashed replicas.
 
     Holds N ``SpikeEngine`` replicas (each typically a physical macro / mesh
     slice, possibly built with its own ``FaultModel``) and routes every
     request by tile health: round-robin across the replicas whose weakest
-    tile still scores above ``health_threshold``, falling back to the single
-    healthiest replica when all are degraded (serving never stalls).  Health
-    comes from each engine's device-resident telemetry — the router performs
-    no extra device work — so a replica whose measured tile loads drift from
-    the calibration profile (stuck-at load inflation, dead-column silence)
-    organically stops receiving traffic as soon as its stats reflect it.
+    tile still scores above ``health_threshold``.  When *all* live replicas
+    are degraded the router either raises (``on_all_degraded="raise"``) or
+    falls back to the healthiest one — but never silently: every fallback is
+    counted in ``stats()["degraded_route"]`` so callers can see traffic
+    landing on known-bad silicon.  Health comes from each engine's
+    device-resident telemetry — the router performs no extra device work.
+
+    Overload hardening (``retry`` — a :class:`fault_tolerance.RetryPolicy`):
+    a replica that *crashes mid-drain* (its drain raises; chaos models this
+    with a raising round hook) is taken out of rotation and every request it
+    had queued-but-not-completed is re-routed to a surviving replica after
+    exponential backoff with counter-based seeded jitter (deterministic —
+    no wall-clock RNG in the datapath).  A replica whose drain exceeds
+    ``retry.attempt_timeout_s`` is counted a timeout and marked *slow*:
+    round-robin prefers non-slow healthy replicas from then on.  Requests
+    whose retry budget is exhausted get ``status="failed"`` instead of being
+    silently lost.
     """
 
-    def __init__(self, engines, *, health_threshold: float = 0.75):
+    def __init__(self, engines, *, health_threshold: float = 0.75,
+                 retry: Optional[ft.RetryPolicy] = None,
+                 on_all_degraded: str = "fallback",
+                 sleep=time.sleep, clock=time.monotonic):
         assert engines, "router needs at least one engine"
+        assert on_all_degraded in ("fallback", "raise"), on_all_degraded
         self.engines = list(engines)
         self.health_threshold = health_threshold
+        self.retry = retry or ft.RetryPolicy()
+        self.on_all_degraded = on_all_degraded
         self.routed = [0] * len(self.engines)
+        self.counters = {"retries": 0, "crashes": 0, "timeouts": 0,
+                         "degraded_route": 0, "rejected_full": 0,
+                         "failed": 0}
         self._rr = 0
+        self._down: set[int] = set()
+        self._slow: set[int] = set()
+        self._assigned: list[list] = [[] for _ in self.engines]
+        self._backoff_counter = 0
+        self._sleep = sleep
+        self._clock = clock
 
-    def route(self, request) -> int:
-        """Queue one request on the chosen replica; returns its index."""
-        scores = [e.health() for e in self.engines]
-        healthy = [i for i, s in enumerate(scores)
-                   if s >= self.health_threshold]
-        if healthy:
-            idx = healthy[self._rr % len(healthy)]
+    def backlog(self) -> int:
+        """Routed requests not yet completed on a live replica."""
+        return sum(len(self._assigned[i]) for i in range(len(self.engines))
+                   if i not in self._down)
+
+    def route(self, request, *, exclude=()) -> Optional[int]:
+        """Queue one request on the chosen replica; returns its index, or
+        ``None`` when every candidate's bounded queue rejected it (the
+        request's status is then ``"rejected"`` and
+        ``stats()["rejected_full"]`` counts it)."""
+        avoid = set(exclude) | self._down
+        candidates = [i for i in range(len(self.engines)) if i not in avoid]
+        if not candidates:
+            raise AllReplicasDownError(
+                f"all {len(self.engines)} replicas are down")
+        scores = {i: self.engines[i].health() for i in candidates}
+        healthy = [i for i in candidates
+                   if scores[i] >= self.health_threshold]
+        fast = [i for i in healthy if i not in self._slow]
+        pool = fast or healthy
+        if pool:
+            idx = pool[self._rr % len(pool)]
             self._rr += 1
+            order = [idx] + [i for i in pool if i != idx] + sorted(
+                (i for i in candidates if i not in pool),
+                key=lambda i: -scores[i])
         else:
-            idx = int(np.argmax(scores))
-        self.engines[idx].submit(request)
-        self.routed[idx] += 1
-        return idx
+            # every live candidate is degraded: no silent routing onto
+            # known-bad silicon — count it, and raise if so configured
+            self.counters["degraded_route"] += 1
+            if self.on_all_degraded == "raise":
+                raise AllReplicasDegradedError(
+                    f"all live replicas below health threshold "
+                    f"{self.health_threshold} (scores: {scores})")
+            order = sorted(candidates, key=lambda i: -scores[i])
+        for idx in order:
+            verdict = self.engines[idx].submit(request)
+            if verdict is None or verdict.admitted:
+                request.status = "pending"   # clear any earlier rejection
+                if pool and idx not in pool:
+                    # healthy queues were all full and the request spilled
+                    # onto a degraded replica — visible, not silent
+                    self.counters["degraded_route"] += 1
+                self._assigned[idx].append(request)
+                self.routed[idx] += 1
+                return idx
+        self.counters["rejected_full"] += 1
+        return None
 
     def serve(self, requests=None) -> list:
-        """Route ``requests`` (optional), then drain every replica."""
+        """Route ``requests`` (optional), then drain every live replica —
+        re-routing work off any replica that crashes or stalls mid-drain."""
         if requests is not None:
             if isinstance(requests, (SpikeRequest, EventRequest)):
                 requests = [requests]
             for r in requests:
                 self.route(r)
-        for eng in self.engines:
-            eng.serve()
+        self._drain()
         return requests if requests is not None else []
+
+    def _drain(self) -> None:
+        """Drain passes until every routed request reaches a terminal state.
+
+        A crash mid-drain moves the replica to ``_down`` and re-routes its
+        incomplete requests (retry + backoff), which may enqueue work on a
+        replica already drained this pass — hence the outer loop.  Bounded:
+        each pass either completes requests or downs a replica."""
+        max_passes = 2 * len(self.engines) + 2
+        for _ in range(max_passes):
+            for idx, eng in enumerate(self.engines):
+                if idx in self._down:
+                    continue
+                if not (self._assigned[idx] or eng.queue_depth()):
+                    continue
+                t0 = self._clock()
+                try:
+                    eng.serve()
+                except Exception:
+                    self._on_crash(idx)
+                    continue
+                dt = self._clock() - t0
+                to = self.retry.attempt_timeout_s
+                if to is not None and dt > to:
+                    self.counters["timeouts"] += 1
+                    self._slow.add(idx)
+                self._assigned[idx] = [
+                    r for r in self._assigned[idx]
+                    if r.logits is None and r.status == "pending"]
+            if self.backlog() == 0:
+                return
+
+    def _on_crash(self, idx: int) -> None:
+        """Crashed replica: out of rotation; re-route its incomplete
+        requests with exponential backoff + seeded jitter.  Requests it
+        already completed keep their results (exactly-once: results attach
+        on exactly one replica; lost in-flight work is re-served)."""
+        self.counters["crashes"] += 1
+        self._down.add(idx)
+        victims = [r for r in self._assigned[idx]
+                   if r.logits is None and r.status == "pending"]
+        self._assigned[idx] = []
+        # empty the dead replica's queues: its pending requests are exactly
+        # the victims being re-routed, and leaving them behind would both
+        # leak queue depth and double-serve if the engine were ever drained
+        # again (exactly-once depends on this)
+        eng = self.engines[idx]
+        eng._pending.clear()
+        eng._pending_events.clear()
+        eng._inflight.clear()
+        for r in victims:
+            r.attempts += 1
+            if r.attempts >= self.retry.max_attempts:
+                r.status = "failed"
+                self.counters["failed"] += 1
+                continue
+            self._backoff_counter += 1
+            self._sleep(self.retry.backoff_s(r.attempts,
+                                             self._backoff_counter))
+            try:
+                dest = self.route(r, exclude={idx})
+            except AllReplicasDownError:
+                r.status = "failed"
+                self.counters["failed"] += 1
+                continue
+            if dest is not None:
+                self.counters["retries"] += 1
 
     def stats(self) -> dict:
         per_engine = [
             {"health": e.health(), "degraded": h < self.health_threshold,
+             "down": i in self._down, "slow": i in self._slow,
              "routed": n, "n_requests": e.stats()["n_requests"]}
-            for e, n, h in zip(self.engines, self.routed,
-                               (e.health() for e in self.engines))
+            for i, (e, n, h) in enumerate(zip(
+                self.engines, self.routed,
+                (e.health() for e in self.engines)))
         ]
         return {
             "n_engines": len(self.engines),
             "health_threshold": self.health_threshold,
             "routed": list(self.routed),
             "engines": per_engine,
+            "down": sorted(self._down),
+            "slow": sorted(self._slow),
+            "backlog": self.backlog(),
+            **self.counters,
         }

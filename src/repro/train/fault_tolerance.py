@@ -11,6 +11,10 @@ Design notes for the 1000+-node target:
   * elastic_replan — maps a surviving-chip count to the nearest valid mesh and
     the restore path is a plain device_put re-shard (checkpoint/io.restore),
     so scale-down restarts reuse the same artifacts.
+  * RetryPolicy — exponential backoff with counter-based seeded jitter (a
+    splitmix64 hash of (seed, counter), no wall-clock RNG anywhere in the
+    datapath) and a per-attempt timeout, consumed by the serving plane's
+    ``FaultAwareRouter`` to re-route requests off crashed/stalled replicas.
 """
 
 from __future__ import annotations
@@ -96,6 +100,50 @@ class StragglerWatchdog:
             if self.on_straggler:
                 self.on_straggler(step, wall_s, self._ema)
         self._ema = self.ema_decay * self._ema + (1 - self.ema_decay) * wall_s
+
+
+def _splitmix64(x: int) -> int:
+    """One splitmix64 round: a strong 64-bit integer mix (pure int math)."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+def counter_uniform(seed: int, counter: int) -> float:
+    """Deterministic uniform in [0, 1) from (seed, counter) — the serving
+    plane's jitter source: counter-based like the STDP RNG, so retries are
+    reproducible and no wall-clock entropy enters the datapath."""
+    return _splitmix64(_splitmix64(seed) ^ counter) / 2.0 ** 64
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff knobs for re-routing requests across serving replicas.
+
+    ``backoff_s(attempt, counter)`` is the sleep before retry number
+    ``attempt`` (1-based): exponential in the attempt, capped at
+    ``max_backoff_s``, jittered by ``jitter`` (fractional, symmetric) using
+    the counter-based uniform above.  ``attempt_timeout_s`` bounds one
+    replica drain — a drain exceeding it marks the replica slow so the
+    router steers subsequent traffic away.
+    """
+
+    max_attempts: int = 3
+    base_backoff_s: float = 0.01
+    backoff_multiplier: float = 2.0
+    max_backoff_s: float = 1.0
+    jitter: float = 0.5
+    seed: int = 0
+    attempt_timeout_s: Optional[float] = None
+
+    def backoff_s(self, attempt: int, counter: int) -> float:
+        base = min(
+            self.base_backoff_s * self.backoff_multiplier ** max(0, attempt - 1),
+            self.max_backoff_s,
+        )
+        u = counter_uniform(self.seed, counter)
+        return base * (1.0 + self.jitter * (2.0 * u - 1.0))
 
 
 class ReplanResult(tuple):

@@ -157,3 +157,56 @@ def test_data_pipeline_host_sharding():
     b0, b1 = hosts[0].next_batch(), hosts[1].next_batch()
     assert b0["tokens"].shape == (4, 32)
     assert not np.array_equal(b0["tokens"], b1["tokens"])  # distinct shards
+
+
+def test_straggler_watchdog_warmup_crossing_recovery():
+    # warmup: even wildly slow steps never flag while the EMA seeds
+    wd = ft.StragglerWatchdog(threshold=2.0, warmup_steps=3)
+    for step, wall in enumerate((10.0, 0.1, 50.0)):
+        wd.record(step, wall)
+    assert wd.flagged == []
+
+    hits = []
+    wd2 = ft.StragglerWatchdog(threshold=2.0, warmup_steps=2,
+                               on_straggler=lambda s, w, e: hits.append(s))
+    for s in range(8):
+        wd2.record(s, 0.1)
+    assert wd2._ema == pytest.approx(0.1)
+    # crossing: wall > threshold x EMA flags (step, wall, ema) and fires
+    # the callback; the slow sample still feeds the EMA afterwards
+    wd2.record(8, 0.21)
+    assert hits == [8]
+    step, wall, ema = wd2.flagged[0]
+    assert step == 8 and wall == 0.21 and ema == pytest.approx(0.1)
+    assert wd2._ema > ema
+    # recovery: normal-speed rounds stop flagging and the EMA decays back
+    for s in range(9, 30):
+        wd2.record(s, 0.1)
+    assert len(wd2.flagged) == 1
+    assert wd2._ema == pytest.approx(0.1, rel=2e-2)
+
+
+def test_retry_policy_backoff_deterministic_and_bounded():
+    p = ft.RetryPolicy(max_attempts=5, base_backoff_s=0.01,
+                       backoff_multiplier=2.0, max_backoff_s=0.05,
+                       jitter=0.5, seed=42)
+    # counter-based: same (seed, counter) replays, either moving changes it
+    assert p.backoff_s(2, 7) == p.backoff_s(2, 7)
+    assert p.backoff_s(2, 7) != p.backoff_s(2, 8)
+    assert p.backoff_s(2, 7) != dataclasses.replace(p, seed=43).backoff_s(2, 7)
+    # jitter bounds: base * (1 +- jitter) at every attempt
+    for attempt in range(1, 6):
+        base = min(0.01 * 2.0 ** (attempt - 1), 0.05)
+        for c in range(25):
+            assert base * 0.5 <= p.backoff_s(attempt, c) <= base * 1.5
+    # exponential growth capped at max_backoff_s (jitter off)
+    q = ft.RetryPolicy(base_backoff_s=0.01, jitter=0.0, max_backoff_s=0.05)
+    assert [q.backoff_s(a, 0) for a in range(1, 6)] == pytest.approx(
+        [0.01, 0.02, 0.04, 0.05, 0.05])
+
+
+def test_counter_uniform_is_in_range_and_well_spread():
+    us = [ft.counter_uniform(0, c) for c in range(1000)]
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert len(set(us)) == 1000          # no collisions over the counter
+    assert abs(np.mean(us) - 0.5) < 0.05
