@@ -59,6 +59,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import packing
 from repro.core.esam import arbiter as arb
 from repro.core.esam import faults as faults_mod
+from repro.core.esam import neuron as nrn
 from repro.core.esam import tile as tile_mod
 from repro.core.esam import temporal as temporal_mod
 
@@ -251,7 +252,100 @@ class EsamPlan:
         else:
             self._fault_ports = ()
             self._fault_masks = None
+
+        # -------- operand prep (hoisted out of every call) ----------------
+        # The compiled executable never sees raw {0,1}[K, N] stored bits: it
+        # closes over mode-native operands — ±1 decodes, uint32 weight bit
+        # planes, the mega-kernel DMA slabs — sliced ONCE here (and again
+        # only if the network's parameter arrays are swapped; see _prepare).
+        #: packed plans run the single-launch popcount mega kernel unless a
+        #: tile column is sharded (the inter-tile all_gather cannot happen
+        #: inside one launch) — then per-tile popcount kernels + gather.
+        self._use_mega = spec.mode == "packed" and not any(self._col_shard)
+        self._eff_ports = (max(1, int(spec.read_ports))
+                           if isinstance(spec.read_ports, int) else None)
+        self._prep_key = None
+        self._prep_src = None    # strong refs pin ids against reuse after GC
+        self._prep_params = None
         self._exec = self._compile()
+
+    # ------------------------------------------------------------------ #
+    # operand prep: decode / bit-slice / fault once, serve every batch
+    # ------------------------------------------------------------------ #
+    def _cycle_port_options(self) -> tuple[int, ...]:
+        rp = self.spec.read_ports
+        options = rp if isinstance(rp, tuple) else (rp,)
+        return tuple(sorted({max(1, int(o)) for o in options}))
+
+    def _build_params(self, wb, vth, off):
+        """Mode-native operands from the network's stored bits.
+
+        Fault masks were drawn at build time; applying them here (eagerly,
+        outside the executable) keeps every per-call trace free of both the
+        {0,1} -> ±1 decode and the mask arithmetic.  Counter-based masks make
+        the prepped operands identical across device counts, so sharded
+        faulted plans stay bit-identical to single-device.
+        """
+        from repro.kernels.cim_popcount import ops as pop_ops
+
+        spec, fmk = self.spec, self._fault_masks
+        if fmk is not None:
+            vth = tuple(faults_mod.faulted_vth(vth, fmk))
+            if spec.mode != "cycle":
+                wb = tuple(faults_mod.faulted_weights(wb, fmk, self._eff_ports))
+        params: dict[str, Any] = {"vth": vth, "out_offset": off}
+        if spec.mode == "functional" or (
+            spec.mode == "prefix" and not self.prefix_packed
+        ):
+            params["w_signed"] = tuple(nrn.decode_bitlines(w) for w in wb)
+        elif spec.mode in ("packed", "prefix"):
+            planes = tuple(packing.pack_weight_planes(w) for w in wb)
+            if self._use_mega:
+                w_stack, vth_stack = pop_ops.stack_cascade_operands(
+                    planes, vth, self.topology)
+                params["w_stack"], params["vth_stack"] = w_stack, vth_stack
+            else:
+                params["w_planes"] = planes
+        elif spec.mode == "temporal":
+            # both dispatch targets: uint32 planes for the popcount kernel
+            # path, the pre-decoded ±1 f32 operand for the BLAS ref path
+            params["w_planes"] = tuple(packing.pack_weight_planes(w) for w in wb)
+            params["w_signed_f32"] = tuple(
+                2.0 * w.astype(jnp.float32) - 1.0 for w in wb)
+        else:  # cycle — one ±1 decode per effective port count in the sweep
+            by_ports: dict[int, tuple] = {}
+            clean = None
+            for ports in self._cycle_port_options():
+                if fmk is not None:
+                    wb_p = faults_mod.faulted_weights(wb, fmk, ports)
+                    by_ports[ports] = tuple(
+                        nrn.decode_bitlines(w) for w in wb_p)
+                else:
+                    # no faults: every port count reads the same array
+                    if clean is None:
+                        clean = tuple(nrn.decode_bitlines(w) for w in wb)
+                    by_ports[ports] = clean
+            params["cycle_w_signed"] = by_ports
+        return params
+
+    def _prepare(self):
+        """Cached prep, re-run only when a parameter array is swapped.
+
+        Keyed on the ids of the network's parameter arrays: jax arrays are
+        immutable, so value changes can only arrive as *new* array objects
+        (e.g. a learned readout swapped in), which changes the key — a cached
+        plan can never serve stale parameters.  ``_prep_src`` holds strong
+        references so a freed array's id cannot be reused while cached.
+        """
+        net = self.network
+        src = (*net.weight_bits, *net.vth, net.out_offset)
+        key = tuple(map(id, src))
+        if key != self._prep_key:
+            self._prep_params = self._build_params(
+                tuple(net.weight_bits), tuple(net.vth), net.out_offset)
+            self._prep_key = key
+            self._prep_src = src
+        return self._prep_params
 
     # ------------------------------------------------------------------ #
     # the single compiled executable
@@ -261,39 +355,46 @@ class EsamPlan:
         col_axis = self._col_axis
         col_shard = self._col_shard if any(self._col_shard) else None
         topo = self.topology
+        # spec.interpret=True forces the Pallas datapath (in interpret mode
+        # off-TPU); the default dispatches kernel-on-TPU / popcount-ref
+        # elsewhere, mirroring kernels/arbiter.
+        use_kernel = True if spec.interpret else None
 
         def gather(x):
             return jax.lax.all_gather(x, col_axis, axis=-1, tiled=True)
 
-        def dense_prefix(wb, vth, s):
+        def dense_prefix(ws, vth, s):
             hidden = []
-            for i, (w, th) in enumerate(zip(wb[:-1], vth[:-1])):
-                s, _ = tile_mod.functional_tile(w, s, th)
+            for i, (w, th) in enumerate(zip(ws[:-1], vth[:-1])):
+                s, _ = tile_mod.functional_tile(None, s, th, w_signed=w)
                 if col_shard is not None and col_shard[i]:
                     s = gather(s)
                 hidden.append(s)
             return s, hidden
 
-        eff_ports = (max(1, int(spec.read_ports))
-                     if isinstance(spec.read_ports, int) else None)
+        def popcount_prefix(planes, vth, p):
+            """Per-tile popcount cascade (the col-sharded fallback: fired
+            slices all_gather onto the pulse bus between launches)."""
+            from repro.kernels.cim_popcount import ops as pop_ops
+
+            collected = [p]
+            for i, (w, th) in enumerate(zip(planes[:-1], vth[:-1])):
+                p = pop_ops.esam_layer_popcount(
+                    p, w, th, use_kernel=use_kernel, interpret=spec.interpret)
+                if col_shard is not None and col_shard[i]:
+                    p = gather(p)
+                collected.append(p)
+            return p, collected
 
         def fn(params, x):
-            wb, vth = params["weight_bits"], params["vth"]
+            vth = params["vth"]
             off = params["out_offset"]
-            fmk = params.get("faults")
-            if fmk is not None:
-                # fault the datapath ONCE, up front: every mode below then
-                # runs its ordinary clean program on the effective weights/
-                # thresholds the faulty array would actually read (cycle
-                # sweeps re-fault per port option — disturb scales with the
-                # ports pulling on the cell).
-                vth = tuple(faults_mod.faulted_vth(vth, fmk))
-                if spec.mode != "cycle":
-                    wb = tuple(faults_mod.faulted_weights(wb, fmk, eff_ports))
             out: dict[str, Any] = {}
             if spec.mode == "functional":
-                s, hidden = dense_prefix(wb, vth, x)
-                _, vmem = tile_mod.functional_tile(wb[-1], s, vth[-1])
+                ws = params["w_signed"]
+                s, hidden = dense_prefix(ws, vth, x)
+                _, vmem = tile_mod.functional_tile(
+                    None, s, vth[-1], w_signed=ws[-1])
                 out["logits"] = vmem.astype(jnp.float32) + off
                 if spec.collect:
                     out["planes"] = tuple(hidden)
@@ -303,14 +404,19 @@ class EsamPlan:
                         for si in [x, *hidden]
                     )
             elif spec.mode == "packed":
-                from repro.kernels.cim_matmul_packed import ops as packed_ops
+                from repro.kernels.cim_popcount import ops as pop_ops
 
-                p, planes = _packed_cascade(
-                    wb, vth, x, interpret=spec.interpret, collect=True,
-                    col_axis=col_axis, col_shard=col_shard,
-                )
-                vmem = packed_ops.cim_matmul_packed(
-                    p, wb[-1], interpret=spec.interpret)
+                if self._use_mega:
+                    vmem, fired = pop_ops.esam_cascade_popcount(
+                        x, params["w_stack"], params["vth_stack"],
+                        topology=topo, use_kernel=use_kernel,
+                        interpret=spec.interpret)
+                    planes = (x,) + fired
+                else:
+                    p, planes = popcount_prefix(params["w_planes"], vth, x)
+                    vmem = pop_ops.cim_popcount_matmul(
+                        p, params["w_planes"][-1],
+                        use_kernel=use_kernel, interpret=spec.interpret)
                 out["logits"] = vmem.astype(jnp.float32) + off
                 if spec.collect:
                     out["planes"] = tuple(planes)
@@ -320,12 +426,9 @@ class EsamPlan:
                     )
             elif spec.mode == "prefix":
                 if self.prefix_packed:
-                    p, planes = _packed_cascade(
-                        wb, vth, x, interpret=spec.interpret, collect=True,
-                        col_axis=col_axis, col_shard=col_shard,
-                    )
+                    p, planes = popcount_prefix(params["w_planes"], vth, x)
                 else:
-                    p, planes_b = dense_prefix(wb, vth, x)
+                    p, planes_b = dense_prefix(params["w_signed"], vth, x)
                     planes = [x, *planes_b]
                 out["prefix"] = p
                 if spec.collect:
@@ -341,9 +444,12 @@ class EsamPlan:
                 # wants time leading, and its stacked outputs come back
                 # batch-first from temporal_forward.
                 res = temporal_mod.temporal_forward(
-                    wb, vth, off, x.swapaxes(0, 1), spec.temporal,
+                    None, vth, off, x.swapaxes(0, 1), spec.temporal,
                     interpret=spec.interpret,
-                    collect=spec.collect, telemetry=spec.telemetry)
+                    collect=spec.collect, telemetry=spec.telemetry,
+                    w_planes=params["w_planes"],
+                    w_signed_f32=params["w_signed_f32"],
+                    topology=topo)
                 out.update(res)
             else:  # cycle
                 rp = spec.read_ports
@@ -354,13 +460,13 @@ class EsamPlan:
                 for opt in options:
                     ports = max(1, int(opt))
                     if ports not in by_ports:
-                        wb_p = (faults_mod.faulted_weights(wb, fmk, ports)
-                                if fmk is not None else wb)
                         traces = []
                         s = x
-                        for w, th in zip(wb_p, vth):
+                        for w_sgn, th in zip(
+                                params["cycle_w_signed"][ports], vth):
                             tr = tile_mod.simulate_tile_batch(
-                                w, s, th, ports, spec.record_vmem_trace)
+                                None, s, th, ports, spec.record_vmem_trace,
+                                w_signed=w_sgn)
                             traces.append(tr)
                             s = tr.out_spikes
                         logits = traces[-1].vmem_final.astype(jnp.float32) + off
@@ -392,16 +498,37 @@ class EsamPlan:
 
         ba = self._batch_axes if len(self._batch_axes) > 1 else self._batch_axes[0]
         ca = self._col_axis
+        spec = self.spec
+        # operand specs mirror _build_params: ±1 decodes shard like the
+        # stored bits (columns = last axis), weight bit planes are
+        # column-major so the sharded axis is the leading one
         w_specs = tuple(
             P(None, ca) if sh else P(None, None) for sh in self._col_shard
         )
+        p_specs = tuple(
+            P(ca, None) if sh else P(None, None) for sh in self._col_shard
+        )
         v_specs = tuple(P(ca) if sh else P(None) for sh in self._col_shard)
-        params_spec = {
-            "weight_bits": w_specs, "vth": v_specs, "out_offset": P(None),
+        params_spec: dict[str, Any] = {
+            "vth": v_specs, "out_offset": P(None),
         }
-        if self._fault_masks is not None:
-            params_spec["faults"] = faults_mod.mask_specs(
-                self._fault_masks, w_specs, v_specs)
+        if spec.mode == "functional" or (
+            spec.mode == "prefix" and not self.prefix_packed
+        ):
+            params_spec["w_signed"] = w_specs
+        elif spec.mode in ("packed", "prefix"):
+            if self._use_mega:
+                params_spec["w_stack"] = P(None, None, None)
+                params_spec["vth_stack"] = P(None, None)
+            else:
+                params_spec["w_planes"] = p_specs
+        elif spec.mode == "temporal":
+            params_spec["w_planes"] = p_specs
+            params_spec["w_signed_f32"] = w_specs
+        else:  # cycle (data-parallel only — every operand replicated)
+            params_spec["cycle_w_signed"] = {
+                p: w_specs for p in self._cycle_port_options()
+            }
         x_spec = P(ba, None, None) if self.spec.mode == "temporal" else P(ba, None)
         mapped = compat.shard_map(
             fn,
@@ -461,17 +588,10 @@ class EsamPlan:
         pad = (-b) % self._dp
         if pad:
             x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
-        # weights are read from the network at call time (shapes are fixed at
-        # build; values may change — e.g. a learned readout swapped in), so a
-        # cached plan can never serve stale parameters
-        params = {
-            "weight_bits": tuple(self.network.weight_bits),
-            "vth": tuple(self.network.vth),
-            "out_offset": self.network.out_offset,
-        }
-        if self._fault_masks is not None:
-            params["faults"] = self._fault_masks
-        out = self._exec(params, x)
+        # operands are prepped from the network's *current* arrays (cached on
+        # their ids — see _prepare), so a cached plan can never serve stale
+        # parameters, yet no decode/bit-slice survives into the call
+        out = self._exec(self._prepare(), x)
         out = jax.tree_util.tree_map(
             lambda a: a[:b].reshape(lead + a.shape[1:]), out)
         return PlanResult(**out)

@@ -21,9 +21,10 @@ Two structural optimizations ride the fused formulation:
     outside the scan instead of once per step.
 
 Per-step work dispatches by backend, mirroring ``kernels/arbiter``: on TPU
-the MAC is the bit-packed Pallas kernel (``kernels/cim_matmul_packed`` —
-uint32 bitplanes on the inter-tile wire, unpack in VMEM) and the membrane
-update is the fused ``kernels/lif_step`` kernel; elsewhere the MAC unpacks
+the MAC is the popcount-domain Pallas kernel (``kernels/cim_popcount`` —
+uint32 bitplanes on the inter-tile wire AND weight bit planes, no unpack)
+and the membrane update is the fused ``kernels/lif_step`` kernel; elsewhere
+the MAC unpacks
 in-jit and runs one float32 BLAS dot (exact: every operand and partial sum
 is an integer far below 2^24) and the update is the jnp reference.  Both
 paths are bit-identical on the integer datapath.
@@ -90,20 +91,22 @@ def init_state(topology, batch: int):
     return hidden, jnp.zeros((batch, topology[-1]), jnp.float32)
 
 
-def _mac_packed(plane, weight_bits, w_signed_f32, *, use_kernel, interpret):
+def _mac_packed(plane, w_planes, w_signed_f32, n_in, *, use_kernel, interpret):
     """One tile's CIM MAC on the packed wire -> int32 contributions.
 
-    TPU: the bit-packed Pallas kernel (unpack in VMEM, MXU MAC).  Elsewhere:
-    unpack in-jit and one f32 BLAS dot against the pre-decoded ±1 operand —
-    exact integer arithmetic in float32 (|any partial sum| <= n_in << 2^24),
-    bit-identical to the kernel (tested via the plan identities).
+    TPU: the popcount-domain Pallas kernel (``kernels/cim_popcount`` — both
+    operands stay uint32 bitplanes, AND + popcount on the VPU, no unpack).
+    Elsewhere: unpack in-jit and one f32 BLAS dot against the pre-decoded ±1
+    operand — exact integer arithmetic in float32 (|any partial sum| <=
+    n_in << 2^24), bit-identical to the kernel (tested via the plan
+    identities).
     """
     if use_kernel:
-        from repro.kernels.cim_matmul_packed import ops as packed_ops
+        from repro.kernels.cim_popcount import ops as pop_ops
 
-        return packed_ops.cim_matmul_packed(
-            plane, weight_bits, interpret=interpret)
-    s = packing.unpack_spikes(plane, weight_bits.shape[0], jnp.float32)
+        return pop_ops.cim_popcount_matmul(
+            plane, w_planes, use_kernel=True, interpret=interpret)
+    s = packing.unpack_spikes(plane, n_in, jnp.float32)
     out = jax.lax.dot_general(
         s, w_signed_f32, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -121,6 +124,9 @@ def temporal_forward(
     use_kernel: bool | None = None,
     collect: bool = False,
     telemetry: bool = False,
+    w_planes=None,          # per tile uint32[N, ceil(K/32)] (hoisted slices)
+    w_signed_f32=None,      # per tile ±1 float32[K, N] (hoisted decode)
+    topology=None,
 ) -> dict:
     """Membrane-resident fused scan over all T timesteps.
 
@@ -128,24 +134,36 @@ def temporal_forward(
     and never fires (argmax readout): ``logits = V_out(T) + out_offset``.
     Per-step outputs come back batch-first — ``planes``/``loads`` are tuples
     over tiles of ``[B, T, ...]`` — so one sharding spec covers every output.
+
+    ``w_planes``/``w_signed_f32`` accept the plan-build-time operands
+    (``EsamPlan._prepare``): with them ``weight_bits`` may be ``None`` and no
+    per-call decode or bit-slice happens on either dispatch path.
     """
     from repro.kernels.lif_step import ops as lif_ops
 
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     t, batch, _ = events.shape
-    topology = tuple(
-        [weight_bits[0].shape[0]] + [w.shape[1] for w in weight_bits])
+    if topology is None:
+        topology = tuple(
+            [weight_bits[0].shape[0]] + [w.shape[1] for w in weight_bits])
+    topology = tuple(topology)
     decay = jnp.float32(1.0 - cfg.leak)
-    # loop-invariant weight decode, hoisted out of the scan (DCE'd on the
-    # kernel path, which decodes its int8 bits in VMEM)
-    wf = [None if use_kernel else 2.0 * w.astype(jnp.float32) - 1.0
-          for w in weight_bits]
+    # loop-invariant weight operands, hoisted out of the scan — and, when the
+    # plan supplies them, out of the call entirely
+    if use_kernel:
+        wp = (w_planes if w_planes is not None
+              else [packing.pack_weight_planes(w) for w in weight_bits])
+        wf = [None] * len(wp)
+    else:
+        wf = (w_signed_f32 if w_signed_f32 is not None
+              else [2.0 * w.astype(jnp.float32) - 1.0 for w in weight_bits])
+        wp = [None] * len(wf)
 
     # tile 0's MAC sees only the events — lift it out of the time loop as
     # one flattened [T*B, n_in] MAC (the layer-stationary move)
     c_in = _mac_packed(
-        events.reshape(t * batch, -1), weight_bits[0], wf[0],
+        events.reshape(t * batch, -1), wp[0], wf[0], topology[0],
         use_kernel=use_kernel, interpret=interpret,
     ).reshape(t, batch, topology[1])
 
@@ -165,7 +183,7 @@ def temporal_forward(
                 planes.append(p)
             if use_kernel:
                 contrib = _mac_packed(
-                    p, weight_bits[i + 1], wf[i + 1],
+                    p, wp[i + 1], wf[i + 1], topology[i + 1],
                     use_kernel=True, interpret=interpret)
             else:
                 # ref path: the spikes just fired in this buffer — feed the

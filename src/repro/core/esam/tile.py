@@ -59,12 +59,13 @@ def max_drain_cycles(rows: int, ports: int, group: int = 128) -> int:
 # Rank-schedule plane (closed form, no sequential loop)
 # ---------------------------------------------------------------------- #
 def _schedule_trace(
-    weight_bits: jax.Array,   # {0,1}[n_in, n_out]
+    weight_bits: jax.Array,   # {0,1}[n_in, n_out] (or None with w_signed)
     in_spikes: jax.Array,     # bool[B, n_in]
     vth: jax.Array,           # int32[n_out]
     ports: int,
     record_vmem_trace: bool,
     use_kernel: bool | None,
+    w_signed: jax.Array | None = None,
 ) -> TileTrace:
     """Batched closed-form drain: every TileTrace field as a segment sum.
 
@@ -79,9 +80,10 @@ def _schedule_trace(
     """
     from repro.kernels.arbiter import ops as arb_ops
 
-    n_in, n_out = weight_bits.shape
+    if w_signed is None:                                   # pre-decoded by
+        w_signed = nrn.decode_bitlines(weight_bits)        # EsamPlan prep
+    n_in, n_out = w_signed.shape
     batch = in_spikes.shape[0]
-    w_signed = nrn.decode_bitlines(weight_bits)            # {-1,+1} int32
     groups = arb.split_row_groups(in_spikes)               # [B, G, 128]
     n_groups = groups.shape[1]
     max_cycles = max_drain_cycles(n_in, ports)
@@ -127,6 +129,7 @@ def simulate_tile(
     ports: int,
     record_vmem_trace: bool = False,
     use_kernel: bool | None = None,
+    w_signed: jax.Array | None = None,
 ) -> TileTrace:
     """Run one tile to R_empty on the rank-schedule plane (closed form).
 
@@ -134,7 +137,8 @@ def simulate_tile(
     ``record_vmem_trace`` opts in to the full per-cycle V_mem history.
     """
     trace = _schedule_trace(
-        weight_bits, in_spikes[None], vth, ports, record_vmem_trace, use_kernel
+        weight_bits, in_spikes[None], vth, ports, record_vmem_trace,
+        use_kernel, w_signed,
     )
     return jax.tree_util.tree_map(lambda x: x[0], trace)
 
@@ -147,16 +151,20 @@ def simulate_tile_batch(
     ports: int,
     record_vmem_trace: bool = False,
     use_kernel: bool | None = None,
+    w_signed: jax.Array | None = None,
 ) -> TileTrace:
     """Rank-schedule plane over a batch of samples.
 
     Unlike the scan plane this is natively batched — one [B, n_in] matvec and
     one [B*G, 128] schedule call — rather than a vmapped per-sample loop.
     Every TileTrace field gains a leading batch axis; per-sample semantics are
-    identical to the single-sample simulator (tested).
+    identical to the single-sample simulator (tested).  ``w_signed`` accepts
+    the pre-decoded ±1 operand (hoisted by ``EsamPlan``), skipping the
+    per-call ``decode_bitlines``.
     """
     return _schedule_trace(
-        weight_bits, in_spikes, vth, ports, record_vmem_trace, use_kernel
+        weight_bits, in_spikes, vth, ports, record_vmem_trace, use_kernel,
+        w_signed,
     )
 
 
@@ -230,7 +238,11 @@ def simulate_tile_scan_batch(
 
 
 def functional_tile(
-    weight_bits: jax.Array, in_spikes: jax.Array, vth: jax.Array
+    weight_bits: jax.Array,
+    in_spikes: jax.Array,
+    vth: jax.Array,
+    *,
+    w_signed: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Batched functional equivalent: one dense MAC (the TPU-native plane).
 
@@ -239,11 +251,14 @@ def functional_tile(
     identical V_mem / spikes — proven in tests/test_esam_equivalence.py.
 
     Args:
-      weight_bits: {0,1}[n_in, n_out]
+      weight_bits: {0,1}[n_in, n_out] (may be None when ``w_signed`` given)
       in_spikes: bool[..., n_in] (any batch shape)
+      w_signed: optional pre-decoded ±1 int32[n_in, n_out] — the hoisted
+        operand ``EsamPlan`` prepares once, skipping the per-call decode.
     Returns:
       (out_spikes bool[..., n_out], vmem int32[..., n_out])
     """
-    w_signed = nrn.decode_bitlines(weight_bits)
+    if w_signed is None:
+        w_signed = nrn.decode_bitlines(weight_bits)
     vmem = jnp.einsum("...i,io->...o", in_spikes.astype(jnp.int32), w_signed)
     return vmem >= vth, vmem

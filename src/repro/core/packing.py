@@ -83,6 +83,41 @@ def unpack_spikes(packed: jax.Array, n: int, dtype=jnp.int8) -> jax.Array:
 
 
 # --------------------------------------------------------------------- #
+# weight bit planes — the other operand of the popcount-domain MAC
+# --------------------------------------------------------------------- #
+def pack_weight_planes(weight_bits: jax.Array) -> jax.Array:
+    """Stored bits {0,1}[K, N] -> uint32[N, ceil(K/32)] weight bit planes.
+
+    Row ``n`` packs output neuron ``n``'s column of stored bits along the
+    pre-synaptic axis, in exactly the spike wire layout (bit ``b`` of word
+    ``j`` is pre-neuron ``j*32 + b``, zero tail).  With both operands in this
+    layout the CIM MAC never unpacks: for ±1 weights stored as {0,1} bits,
+
+        V[b, n] = sum_k s[b,k] * (2*w[k,n] - 1)
+                = 2 * sum_j popcount(spikes[b,j] & planes[n,j]) - popcount(spikes[b])
+
+    and zero padding is exact in *both* terms — a padded spike bit is 0, so
+    it joins neither the AND nor the row popcount.  Planes are sliced once at
+    plan-build time (``EsamPlan``) and reused for every batch.
+    """
+    return pack_spikes(jnp.asarray(weight_bits).swapaxes(-1, -2))
+
+
+def unpack_weight_planes(planes: jax.Array, n_in: int, dtype=jnp.int8) -> jax.Array:
+    """uint32[N, ceil(K/32)] -> stored bits {0,1}[K, N] (round trip)."""
+    return unpack_spikes(planes, n_in, dtype).swapaxes(-1, -2)
+
+
+def pack_weight_planes_np(weight_bits: np.ndarray) -> np.ndarray:
+    """Host twin of ``pack_weight_planes`` (bit-identical layout)."""
+    return pack_spikes_np(np.asarray(weight_bits).swapaxes(-1, -2))
+
+
+def unpack_weight_planes_np(planes: np.ndarray, n_in: int, dtype=np.int8) -> np.ndarray:
+    return unpack_spikes_np(planes, n_in, dtype).swapaxes(-1, -2)
+
+
+# --------------------------------------------------------------------- #
 # numpy (host) pair — bit-identical layout, no jax dependency at call time
 # --------------------------------------------------------------------- #
 def pack_spikes_np(spikes: np.ndarray) -> np.ndarray:

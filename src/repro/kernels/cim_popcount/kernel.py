@@ -1,0 +1,141 @@
+"""Pallas TPU kernels: popcount-domain CIM MAC + single-launch tile cascade.
+
+``cim_matmul_packed`` already moves spikes as uint32 bitplanes but unpacks
+them in VMEM and hands the MAC to the MXU — the wire format buys the bytes
+but none of the compute.  This family keeps *both* operands packed: weights
+are bit-sliced at plan-build time into the same uint32 layout
+(``packing.pack_weight_planes``) and each MAC block is AND + popcount with
+the row-popcount offset, entirely on the VPU:
+
+    V = 2 * sum_j popcount(s_word_j & w_word_j) - popcount(s)
+
+summed per K block (the per-block offsets add up exactly).  No unpack, no
+bf16 round trip, no MXU — one 32-wide AND+popcount per lane word replaces 32
+multiply-accumulates.
+
+``mega_cascade_kernel`` then fuses the whole tile cascade (MAC -> IF fire ->
+re-pack -> next tile) into ONE launch: the grid walks batch blocks only, the
+fired bitplanes stay resident as kernel values between tiles, and each
+tile's weight-plane slab is DMA'd from HBM into a double-buffered VMEM
+scratch while the previous tile computes — the layer-wise weight/output-
+stationary dataflow of Chauvaux et al. rendered as a Pallas pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cim_matmul_packed.kernel import pack_bits_block
+
+#: vth padding for columns past a tile's real width — no spike plane can
+#: reach it (V <= n_in < 2^30), so padded neurons provably never fire.
+VTH_NEVER_FIRE = 1 << 30
+
+
+def popcount_mac_block(s: jax.Array, w: jax.Array) -> jax.Array:
+    """AND + popcount MAC of one block: (bm, W) x (bn, W) -> int32 (bm, bn).
+
+    Static unroll over the W lane words; each step is a rank-1-style
+    broadcast AND + popcount on a 2-D (bm, bn) tile — pure VPU, no unpack.
+    """
+    bm, w_words = s.shape
+    bn = w.shape[0]
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    for j in range(w_words):
+        acc += jax.lax.population_count(s[:, j][:, None] & w[None, :, j]).astype(
+            jnp.int32
+        )
+    return acc
+
+
+def popcount_mac_kernel(s_ref, w_ref, out_ref, acc_ref, *, n_k: int):
+    """grid = (B/bm, N/bn, K/bk); K innermost.  Both operands packed uint32:
+    s block (bm, bk/32), weight-plane block (bn, bk/32)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[...]
+    # per-block V contribution: 2*AND-popcount - row popcount; the offsets
+    # sum over K blocks to the total row popcount, so blockwise is exact
+    spc = jax.lax.population_count(s).astype(jnp.int32).sum(-1, keepdims=True)
+    acc_ref[...] += 2 * popcount_mac_block(s, w_ref[...]) - spc
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def popcount_fire_kernel(
+    s_ref, w_ref, vth_ref, out_ref, acc_ref, *, n_k: int, pack_output: bool
+):
+    """Popcount MAC with the IF compare (+ output re-pack) fused in the
+    epilogue — V_mem never leaves VMEM, mirroring ``fused_fire_packed``."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[...]
+    spc = jax.lax.population_count(s).astype(jnp.int32).sum(-1, keepdims=True)
+    acc_ref[...] += 2 * popcount_mac_block(s, w_ref[...]) - spc
+
+    @pl.when(k == n_k - 1)
+    def _fire():
+        fired = acc_ref[...] >= vth_ref[...]
+        if pack_output:
+            out_ref[...] = pack_bits_block(fired)
+        else:
+            out_ref[...] = fired.astype(jnp.int8)
+
+
+def mega_cascade_kernel(
+    s_ref,       # (bm, W_in0) uint32 — the network input plane block
+    vth_ref,     # (n_hidden, n_max_pad) int32, padded with VTH_NEVER_FIRE
+    w_ref,       # ANY-space uint32[n_tiles, n_max_pad, w_max] stacked planes
+    logits_ref,  # (bm, n_cls_pad) int32
+    *rest,       # fired refs per hidden tile, then wbuf + DMA semaphores
+    n_pad: tuple[int, ...],    # per tile: padded output width (128-aligned)
+    w_words: tuple[int, ...],  # per tile: real input words ceil(K_t/32)
+):
+    """One launch, whole cascade.  grid = (B/bm,).
+
+    The fired bitplanes are plain kernel values (VMEM-resident SSA), never
+    stored between tiles except into their own output ref; tile t+1's weight
+    slab is prefetched by async copy while tile t computes (double-buffered
+    ``wbuf`` + one DMA semaphore per slot).
+    """
+    n_tiles = len(n_pad)
+    fired_refs = rest[: n_tiles - 1]
+    wbuf, sem = rest[n_tiles - 1], rest[n_tiles]
+    vth = vth_ref[...]
+
+    copies = [
+        pltpu.make_async_copy(w_ref.at[t], wbuf.at[t % 2], sem.at[t % 2])
+        for t in range(n_tiles)
+    ]
+    copies[0].start()
+
+    s = s_ref[...]                                             # (bm, W_in0)
+    spc = jax.lax.population_count(s).astype(jnp.int32).sum(-1, keepdims=True)
+    for t in range(n_tiles):
+        if t + 1 < n_tiles:
+            copies[t + 1].start()
+        copies[t].wait()
+        w = wbuf[t % 2]                                        # (n_max_pad, w_max)
+        v = 2 * popcount_mac_block(
+            s[:, : w_words[t]], w[: n_pad[t], : w_words[t]]
+        ) - spc                                                # (bm, n_pad[t])
+        if t == n_tiles - 1:
+            logits_ref[...] = v
+        else:
+            fired = v >= vth[t, : n_pad[t]][None, :]
+            s = pack_bits_block(fired)                         # stays resident
+            fired_refs[t][...] = s
+            spc = fired.astype(jnp.int32).sum(-1, keepdims=True)

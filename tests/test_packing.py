@@ -72,6 +72,81 @@ def test_packed_width_and_nbytes():
 
 
 # ----------------------------------------------------------------------- #
+# weight bit planes (popcount-domain wire format for the weight matrix)
+# ----------------------------------------------------------------------- #
+@given(
+    n_in=st.integers(1, 300),
+    n_out=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_weight_plane_round_trip(n_in, n_out, seed):
+    """unpack(pack(W)) == W for random [K, N] incl. non-multiple-of-32 K."""
+    w = jax.random.bernoulli(
+        jax.random.PRNGKey(seed), 0.5, (n_in, n_out)).astype(jnp.int8)
+    planes = packing.pack_weight_planes(w)
+    assert planes.dtype == jnp.uint32
+    assert planes.shape == (n_out, packing.packed_width(n_in))
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack_weight_planes(planes, n_in)), np.asarray(w)
+    )
+
+
+@given(n_in=st.integers(1, 200), seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_weight_plane_signed_round_trip(n_in, seed):
+    """Signed +-1 matrices ride the same planes: bits = (W > 0), and the
+    plane round trip reconstructs W exactly via 2b - 1."""
+    bits = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (n_in, 24))
+    w_signed = 2 * bits.astype(jnp.int32) - 1
+    planes = packing.pack_weight_planes((w_signed > 0).astype(jnp.int8))
+    back = packing.unpack_weight_planes(planes, n_in, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(2 * back - 1), np.asarray(w_signed)
+    )
+
+
+@pytest.mark.parametrize("n_in", [32, 100, 256])
+def test_weight_plane_all_zero_and_all_one(n_in):
+    """Degenerate planes: all-zero rows pack to zero words; all-one rows set
+    exactly the first n_in bits (tail stays silent — padding is exact)."""
+    zeros = packing.pack_weight_planes(jnp.zeros((n_in, 8), jnp.int8))
+    np.testing.assert_array_equal(np.asarray(zeros), 0)
+    ones = packing.pack_weight_planes(jnp.ones((n_in, 8), jnp.int8))
+    per_plane = np.array(
+        [bin(int(wd)).count("1") for wd in np.asarray(ones[0])]
+    ).sum()
+    assert per_plane == n_in  # no stray bits past n_in in the last word
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack_weight_planes(ones, n_in)), 1
+    )
+
+
+def test_weight_plane_numpy_and_jnp_bit_identical():
+    w = np.asarray(
+        jax.random.bernoulli(jax.random.PRNGKey(17), 0.5, (100, 12)), np.int8)
+    np.testing.assert_array_equal(
+        packing.pack_weight_planes_np(w),
+        np.asarray(packing.pack_weight_planes(jnp.asarray(w))),
+    )
+    np.testing.assert_array_equal(
+        packing.unpack_weight_planes_np(packing.pack_weight_planes_np(w), 100),
+        w,
+    )
+
+
+def test_weight_planes_share_spike_wire_layout():
+    """Weight planes are pack_spikes of W^T — one plane per output column,
+    bit j*32+b of plane n holds W[j*32+b, n]; same LSB-first lane format the
+    spike wire uses, so AND+popcount needs no per-operand shuffling."""
+    w = jax.random.bernoulli(jax.random.PRNGKey(23), 0.5, (96, 4))
+    np.testing.assert_array_equal(
+        np.asarray(packing.pack_weight_planes(w)),
+        np.asarray(packing.pack_spikes(w.T)),
+    )
+
+
+# ----------------------------------------------------------------------- #
 # packed kernels vs unpacked kernel + oracle — bit exact
 # ----------------------------------------------------------------------- #
 # includes K not a multiple of 128 (100, 160) and B/N off the tile grid;

@@ -243,6 +243,104 @@ def test_cached_plan_reads_current_weights():
     assert not np.array_equal(after, before)
 
 
+def test_plan_executable_closes_over_presliced_operands():
+    """The compiled executable never sees raw weight_bits: every mode's prep
+    hands it mode-native operands built once at plan-build/prep time — uint32
+    weight bit planes / DMA slabs for the popcount datapaths, decoded +-1
+    matrices for the dense ones — and the prep cache only rebuilds when the
+    parameter objects actually change."""
+    net = _rand_net(jax.random.PRNGKey(71), (256, 128, 10))
+    # packed (mega cascade): stacked uint32 planes + vth slab, no raw bits
+    plan = net.plan(mode="packed", interpret=True)
+    assert plan._use_mega
+    params = plan._prepare()
+    assert "weight_bits" not in params
+    assert params["w_stack"].dtype == jnp.uint32
+    assert params["w_stack"].shape[0] == 2           # one slab per tile
+    assert params["vth_stack"].shape == (1, 128)     # hidden-tile thresholds
+    # prep is cached: same params object until a weight actually changes
+    assert plan._prepare() is params
+    net.weight_bits[-1] = (1 - net.weight_bits[-1]).astype(jnp.int8)
+    params2 = plan._prepare()
+    assert params2 is not params
+    assert not np.array_equal(np.asarray(params2["w_stack"]),
+                              np.asarray(params["w_stack"]))
+    # functional: decoded +-1 matrices, hoisted out of the traced body
+    fplan = net.plan(mode="functional")
+    fparams = fplan._prepare()
+    assert "weight_bits" not in fparams
+    assert all(np.isin(np.asarray(w), (-1, 1)).all()
+               for w in fparams["w_signed"])
+    # temporal: per-step MAC operands (bit planes + f32 signed) pre-built
+    from repro.core.esam.temporal import TemporalConfig
+
+    tplan = net.plan(mode="temporal",
+                     temporal=TemporalConfig(n_steps=2), interpret=True)
+    tparams = tplan._prepare()
+    assert all(p.dtype == jnp.uint32 for p in tparams["w_planes"])
+    assert all(w.dtype == jnp.float32 for w in tparams["w_signed_f32"])
+    # cycle: decoded matrices shared across the port sweep when unfaulted
+    cplan = net.plan(mode="cycle", read_ports=(0, 4))
+    by_ports = cplan._prepare()["cycle_w_signed"]
+    assert set(by_ports) == {1, 4}
+    assert by_ports[1] is by_ports[4]
+
+
+@pytest.mark.parametrize("mode", ["functional", "packed", "prefix", "cycle",
+                                  "temporal"])
+@pytest.mark.parametrize("faulted", [False, True])
+def test_plan_modes_bit_identical_clean_and_faulted(mode, faulted):
+    """Popcount-backed packed/prefix/temporal plans agree bit-exactly with
+    the functional (unpacked) plane per mode, clean and under a fault model
+    (faults now applied at prep time, outside the executable)."""
+    from repro.core.esam.faults import FaultModel
+    from repro.core.esam.temporal import TemporalConfig
+
+    topo = (256, 128, 10)
+    net = _rand_net(jax.random.PRNGKey(73 + faulted), topo)
+    s = jax.random.bernoulli(jax.random.PRNGKey(15), 0.4, (13, 256))
+    fm = FaultModel(seed=5, stuck0_rate=0.03, stuck1_rate=0.03,
+                    vth_sigma=1.0, read_disturb=1e-3) if faulted else None
+    # oracle: functional chain on the eagerly-faulted parameters, at the
+    # same effective port count the plan will use
+    ports = 2 if mode == "cycle" else 4
+    if faulted:
+        from repro.core.esam import faults as faults_mod
+
+        masks = fm.build_masks(net.topology, (ports,))
+        wb = faults_mod.faulted_weights(net.weight_bits, masks, ports)
+        vth = faults_mod.faulted_vth(net.vth, masks)
+        oracle_net = EsamNetwork(weight_bits=list(wb), vth=list(vth),
+                                 out_offset=net.out_offset)
+    else:
+        oracle_net = net
+    want, _ = _oracle_functional(oracle_net, s)
+    kw = {"faults": fm} if faulted else {}
+    if mode == "temporal":
+        # T=1, no leak, zero-state: one step == the static forward pass
+        cfg = TemporalConfig(n_steps=1, leak=0.0, reset="zero", refractory=0)
+        res = net.plan(mode="temporal", interpret=True, temporal=cfg,
+                       **kw)(s[None])
+    elif mode == "cycle":
+        res = net.plan(mode="cycle", read_ports=2, **kw)(s)
+    elif mode == "prefix":
+        plan = net.plan(mode="prefix", interpret=True, **kw)
+        prefix = plan(s).prefix
+        # readout on the popcount prefix == functional hidden chain packed
+        x = s
+        for w, th in zip(oracle_net.weight_bits[:-1], oracle_net.vth[:-1]):
+            x, _ = tile_mod.functional_tile(w, x, th)
+        np.testing.assert_array_equal(
+            np.asarray(prefix), np.asarray(packing.pack_spikes(x)))
+        return
+    else:
+        res = net.plan(mode=mode, interpret=True, **kw)(s)
+    np.testing.assert_array_equal(np.asarray(res.logits), np.asarray(want))
+    if faulted:
+        clean, _ = _oracle_functional(net, s)
+        assert not np.array_equal(np.asarray(res.logits), np.asarray(clean))
+
+
 def test_plans_are_cached_per_network():
     net = _rand_net(jax.random.PRNGKey(53), (128, 64, 10))
     assert net.plan(mode="functional") is net.plan(mode="functional")
@@ -280,8 +378,15 @@ s = jax.random.bernoulli(jax.random.fold_in(key, 7), 0.35, (37, 768))
 
 single = net.plan(mode="packed", telemetry=True, collect=True, interpret=True)(s)
 dp_rules = shd.make_esam_rules(shd.esam_data_mesh())
-dp = net.plan(mode="packed", telemetry=True, collect=True, interpret=True,
-              rules=dp_rules)(s)
+dp_plan = net.plan(mode="packed", telemetry=True, collect=True, interpret=True,
+                   rules=dp_rules)
+# dp-sharded packed plans run the popcount mega cascade (batch-only shard);
+# the executable closes over the prepped uint32 DMA slabs, not raw bits
+assert dp_plan._use_mega
+dp_params = dp_plan._prepare()
+assert dp_params["w_stack"].dtype == jnp.uint32, dp_params["w_stack"].dtype
+assert "weight_bits" not in dp_params
+dp = dp_plan(s)
 np.testing.assert_array_equal(np.asarray(dp.logits), np.asarray(single.logits))
 for a, b in zip(dp.planes, single.planes):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -294,6 +399,10 @@ mp_rules = shd.make_esam_rules(
 mp_plan = net.plan(mode="packed", telemetry=True, interpret=True,
                    rules=mp_rules)
 assert any(mp_plan._col_shard), mp_plan._col_shard
+# column-sharded tiles cannot all_gather inside one launch: the plan falls
+# back to per-tile popcount kernels over sharded uint32 weight planes
+assert not mp_plan._use_mega
+assert all(p.dtype == jnp.uint32 for p in mp_plan._prepare()["w_planes"])
 mp = mp_plan(s)
 np.testing.assert_array_equal(np.asarray(mp.logits), np.asarray(single.logits))
 for a, b in zip(mp.loads, single.loads):
