@@ -1,12 +1,19 @@
 """Sharded-plan serving throughput: the ESAM system-level claim as a bench.
 
 Drives ``SpikeEngine`` (admission queue -> power-of-two buckets -> one
-compiled, optionally ``shard_map``-ped packed plan) with synthetic digit
-traffic and records, per configuration:
+compiled, optionally ``shard_map``-ped packed plan, with fused multi-round
+dispatch + host/device overlap) with synthetic digit traffic and records,
+per configuration:
 
   * wall-clock serving rate (requests/s) on this host,
   * the modeled hardware operating point in paper units — pipelined MInf/s
     and pJ/Inf from the device-resident telemetry accumulators,
+  * dp-scaling lanes (dp2/dp4/dp8 on the host-platform mesh): each lane's
+    req/s ratio vs the single-device lane (``vs_single``) plus the fused
+    round counters — the regression gate for the old dp8 0.29x loss,
+  * a cold-start lane: first-request latency on a cold engine vs an
+    AOT-warmed one (``SpikeEngine.warmup``), fresh networks per lane so no
+    plan cache crosses over,
   * open-loop lanes (seeded Poisson arrivals below and above saturation
     plus a request storm): p50/p99/p99.9 latency, shed / rejected counts,
     and goodput-under-SLO through the overload-hardened plane (bounded
@@ -44,7 +51,10 @@ from repro.data import digits
 from repro.distributed import sharding as shd
 from repro.serve.engine import SpikeEngine, SpikeRequest
 
-N_REQUESTS = int(os.environ.get("BENCH_SERVING_REQUESTS", "256"))
+# enough requests that the dp lanes measure steady-state super-batching
+# (at 256 the whole run is one or two rounds and fixed dispatch overhead
+# dominates the scaling ratio)
+N_REQUESTS = int(os.environ.get("BENCH_SERVING_REQUESTS", "2048"))
 MAX_BATCH = 128
 
 
@@ -61,33 +71,44 @@ def _paper_net(seed: int = 0) -> EsamNetwork:
                        out_offset=jnp.zeros((topo[-1],), jnp.float32))
 
 
-def _serve_once(rec: Recorder, tag: str, net, reqs_np, rules) -> None:
-    # warm on a throwaway engine serving the same workload, so every bucket
-    # the timed run dispatches is already compiled (plans are cached per
-    # network) and the timed engine's stats() see only the timed requests —
-    # time_call's warmup=1 convention, engine-shaped
+def _serve_once(rec: Recorder, tag: str, net, reqs_np, rules,
+                vs_single: float = None) -> float:
+    """One throughput lane on the fused async engine.  ``warmup()`` AOT-
+    compiles the bucket ladder (and warms the telemetry ops) up front, so
+    the timed run measures steady-state serving and the timed engine's
+    stats() see only the timed requests.  Returns the req/s rate; dp lanes
+    pass the single-device rate as ``vs_single`` to record the scaling
+    ratio the CI gate asserts."""
     engine_kw = dict(max_batch=MAX_BATCH, telemetry=True, read_ports=4,
-                     rules=rules)
-    SpikeEngine(net, **engine_kw).serve(
-        [SpikeRequest(spikes=r) for r in reqs_np])
-
+                     rules=rules, fuse_rounds="auto", overlap=True)
     eng = SpikeEngine(net, **engine_kw)
+    eng.warmup()
     reqs = [SpikeRequest(spikes=r) for r in reqs_np]
     t0 = time.perf_counter()
     eng.serve(reqs)
     wall_s = time.perf_counter() - t0
     st = eng.stats()
     req_s = len(reqs) / wall_s
+    extra = "" if vs_single is None else (
+        f"vs_single={req_s / vs_single:.2f}x;"
+        f"scaling_efficiency={req_s / (vs_single * st['data_parallel']):.2f};")
     rec.emit(
         f"serving_{tag}", wall_s * 1e6 / len(reqs),
         f"requests={len(reqs)};requests_per_s={req_s:,.0f};"
         f"data_parallel={st['data_parallel']};buckets={eng._buckets};"
+        f"{extra}"
+        f"fuse={st['fuse_rounds']};overlap={st['overlap']};"
+        f"rounds_static={st['rounds_static']};"
+        f"fused_rounds={st['fused_rounds']};"
+        f"rounds_saved={st['rounds_saved']};"
         f"model_minf_s={st['throughput_pipelined_inf_s']/1e6:.2f}"
         f"(paper {cm.PAPER_THROUGHPUT_INF_S/1e6:.0f});"
         f"model_energy_pj_inf={st['energy_pj_per_inf']:.0f}"
         f"(paper {cm.PAPER_ENERGY_PJ_PER_INF:.0f});"
         f"cell={st['cell']}",
     )
+    eng.close()
+    return req_s
 
 
 SMOKE = bool(os.environ.get("BENCH_SERVING_SMOKE"))
@@ -115,19 +136,15 @@ def _overload_lanes(rec: Recorder, net) -> None:
                            queue_limit=queue_limit,
                            ladder=DegradationLadder.default(max_batch))
 
-    # closed-loop warm pass + sustainable-rate measurement on an unbounded
-    # engine, so the lane rates are anchored at this host's actual
-    # saturation point.  Warm every bucket in the ladder: open-loop rounds
-    # can be as small as one request, and an unwarmed small bucket would
-    # charge its compile to the first lane round (shedding everything
-    # behind it on the deadline).
+    # AOT-warm every bucket in the ladder, then measure the sustainable
+    # rate on an unbounded engine so the lane rates are anchored at this
+    # host's actual saturation point.  (Open-loop rounds can be as small as
+    # one request; an unwarmed small bucket would charge its compile to the
+    # first lane round, shedding everything behind it on the deadline.)
     blend = dict(n_requests=n, p_event=0.0, n_in=n_in)
     warm = mk(queue_limit=None)
-    from repro.serve.traffic import build_requests
-    for b in warm._buckets:
-        warm.serve(build_requests(
-            TrafficConfig(rate_hz=1.0, n_requests=b, seed=21, p_event=0.0,
-                          n_in=n_in))[0])
+    from repro.serve.traffic import build_requests, warmup_engine
+    warmup_engine(warm, TrafficConfig(rate_hz=1.0, **blend))
     timed = build_requests(TrafficConfig(rate_hz=1.0, seed=22, **blend))[0]
     t0 = time.perf_counter()
     warm.serve(timed)
@@ -186,21 +203,64 @@ def _overload_lanes(rec: Recorder, net) -> None:
     )
 
 
+def _cold_start_lane(rec: Recorder) -> None:
+    """First-request latency, cold vs AOT-warmed.
+
+    Each sub-lane builds a *fresh* network (fresh arrays => empty plan
+    cache), so the cold lane genuinely pays the first compile in the serve
+    path and the warm lane pays it in ``warmup()`` instead.  With the
+    persistent compilation cache enabled (env JAX_COMPILATION_CACHE_DIR, or
+    ``launch/env.py``) the warmup itself re-warms from disk on a restart.
+    """
+    def first_request_ms(warm: bool, seed: int):
+        net = _paper_net(seed)
+        eng = SpikeEngine(net, max_batch=32, telemetry=True)
+        warmup_s = 0.0
+        if warm:
+            t0 = time.perf_counter()
+            eng.warmup()
+            warmup_s = time.perf_counter() - t0
+        spikes = (np.random.default_rng(seed).random(net.topology[0])
+                  < 0.3).astype(np.uint8)
+        t0 = time.perf_counter()
+        eng.serve([SpikeRequest(spikes=spikes)])
+        return (time.perf_counter() - t0) * 1e3, warmup_s
+
+    cold_ms, _ = first_request_ms(False, seed=101)
+    warm_ms, warmup_s = first_request_ms(True, seed=102)
+    rec.emit(
+        "serving_cold_start", warm_ms * 1e3,
+        f"cold_first_request_ms={cold_ms:.1f};"
+        f"warm_first_request_ms={warm_ms:.1f};"
+        f"warmup_s={warmup_s:.2f};"
+        f"speedup={cold_ms / max(warm_ms, 1e-9):.1f}x;"
+        f"compilation_cache="
+        f"{'on' if os.environ.get('JAX_COMPILATION_CACHE_DIR') else 'off'}",
+    )
+
+
 def run():
     rec = Recorder()
     net = _paper_net()
     x, _ = digits.make_spike_dataset(N_REQUESTS, seed=7)
 
-    _serve_once(rec, "single_device", net, x, rules=None)
+    single_req_s = _serve_once(rec, "single_device", net, x, rules=None)
     n_dev = len(jax.devices())
     if n_dev > 1:
-        rules = shd.make_esam_rules(shd.esam_data_mesh())
-        _serve_once(rec, f"sharded_dp{n_dev}", net, x, rules=rules)
+        # dp-scaling ladder: every power-of-two mesh up to the host's
+        # device count (smoke keeps just the full mesh — the CI gate)
+        dps = [n_dev] if SMOKE else sorted(
+            d for d in (2, 4, 8) if d <= n_dev)
+        for d in dps:
+            rules = shd.make_esam_rules(shd.esam_data_mesh(d))
+            _serve_once(rec, f"sharded_dp{d}", net, x, rules=rules,
+                        vs_single=single_req_s)
     else:
         rec.emit("serving_sharded_skipped", 0.0,
                  "devices=1(set XLA_FLAGS=--xla_force_host_platform_"
-                 "device_count=8 for the data-parallel lane)")
+                 "device_count=8 for the data-parallel lanes)")
 
+    _cold_start_lane(rec)
     _overload_lanes(rec, net)
 
     rec.write_json(os.environ.get("BENCH_SERVING_OUT", "BENCH_serving.json"))

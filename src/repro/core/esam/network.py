@@ -95,6 +95,7 @@ class EsamNetwork:
         temporal=None,  # Optional[temporal.TemporalConfig], mode="temporal"
         faults=None,  # Optional[faults.FaultModel]
         rules=None,
+        donate: bool = False,
     ) -> EsamPlan:
         """Build (or fetch from this network's cache) one compiled plan.
 
@@ -107,7 +108,9 @@ class EsamNetwork:
         :class:`~repro.core.esam.faults.FaultModel` to compile the plan with
         that fault population injected into the datapath (each model is its
         own cache entry; ``None`` is the clean plan, bit-identical to
-        pre-fault builds).
+        pre-fault builds).  ``donate=True`` donates the input batch to XLA
+        so drain loops reuse device allocations round-over-round — only for
+        callers that own the arrays they pass (the serving engine).
         """
         spec = PlanSpec(
             mode=mode,
@@ -118,6 +121,7 @@ class EsamNetwork:
             interpret=interpret,
             temporal=temporal,
             faults=faults,
+            donate=donate,
         )
         key = (spec, None if rules is None else id(rules))
         cached = self._plan_cache.get(key)

@@ -50,6 +50,8 @@ by tests on an ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` mesh).
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Any, Mapping, Optional, Sequence
 
 import jax
@@ -86,6 +88,11 @@ class PlanSpec:
     #: each FaultModel is its own cache entry).  ``None`` compiles the clean
     #: plan, bit-identical to pre-fault builds (property-tested).
     faults: Optional[faults_mod.FaultModel] = None
+    #: donate the input buffer to XLA so allocations are reused across rounds
+    #: (the serving engine's drain loop dispatches a fresh padded batch per
+    #: round).  Only safe when every caller hands the plan arrays it owns —
+    #: a donated array is invalidated by the call.
+    donate: bool = False
 
     def __post_init__(self):
         assert self.mode in MODES, (self.mode, MODES)
@@ -267,6 +274,10 @@ class EsamPlan:
         self._prep_key = None
         self._prep_src = None    # strong refs pin ids against reuse after GC
         self._prep_params = None
+        #: AOT-compiled executables keyed on padded batch size (``warmup``).
+        #: Compiled objects take the prepped params as a runtime argument, so
+        #: a parameter swap (same shapes) never invalidates them.
+        self._aot: dict[int, Any] = {}
         self._exec = self._compile()
 
     # ------------------------------------------------------------------ #
@@ -492,8 +503,15 @@ class EsamPlan:
 
     def _compile(self):
         fn = self._make_fn()
+        donate = (1,) if self.spec.donate else ()
+        if self.spec.donate:
+            # CPU/interpret backends may decline the donation (shape-mismatched
+            # outputs); that is an optimization miss, not an error worth a
+            # per-round warning in the serve loop
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
         if self.rules is None:
-            return jax.jit(fn)
+            return jax.jit(fn, donate_argnums=donate)
         from repro import compat
 
         ba = self._batch_axes if len(self._batch_axes) > 1 else self._batch_axes[0]
@@ -536,7 +554,55 @@ class EsamPlan:
             in_specs=(params_spec, x_spec),
             out_specs=P(ba),
         )
-        return jax.jit(mapped)
+        return jax.jit(mapped, donate_argnums=donate)
+
+    # ------------------------------------------------------------------ #
+    # cold start: AOT warmup of the executable's shape ladder
+    # ------------------------------------------------------------------ #
+    def _input_struct(self, batch: int) -> jax.ShapeDtypeStruct:
+        """Abstract input of one padded batch, as ``_normalize`` produces it."""
+        if self.spec.mode == "temporal":
+            return jax.ShapeDtypeStruct(
+                (batch, self.spec.temporal.n_steps, self._in_width),
+                jnp.uint32)
+        dtype = jnp.uint32 if self._packed_input else jnp.bool_
+        return jax.ShapeDtypeStruct((batch, self._in_width), dtype)
+
+    def warmup(self, batch_sizes: Sequence[int], *,
+               aot: bool = True) -> dict[int, float]:
+        """Compile this plan's executable ahead of serving, one shape per
+        (dp-aligned, padded) batch size — typically an engine's bucket ladder.
+
+        With ``aot=True`` (default) each shape is lowered and compiled once
+        and the Compiled object cached on the plan: ``__call__`` then invokes
+        it directly, bypassing the jit dispatch cache entirely, so a warmed
+        shape can never recompile in the serve path (the cold-start
+        regression test asserts ``_exec`` is untouched).  Compiled objects
+        take the prepped operands as runtime arguments — swapping parameter
+        arrays of the same shape keeps the warmup valid.  ``aot=False``
+        instead executes a zeros batch per shape, populating the ordinary
+        jit cache (useful where a backend rejects AOT calls).
+
+        Returns ``{batch: seconds}`` compile times — with the persistent
+        compilation cache enabled (``launch/env.py``) a re-run's times drop
+        to the cache-hit cost, which is what makes cold start instant.
+        """
+        params = self._prepare()
+        times: dict[int, float] = {}
+        for b in batch_sizes:
+            b = int(b)
+            assert b >= 1 and b % self._dp == 0, (b, self._dp)
+            t0 = time.perf_counter()
+            if aot:
+                if b not in self._aot:
+                    self._aot[b] = self._exec.lower(
+                        params, self._input_struct(b)).compile()
+            else:
+                struct = self._input_struct(b)
+                x = jnp.zeros(struct.shape, struct.dtype)
+                jax.block_until_ready(self._exec(params, x))
+            times[b] = time.perf_counter() - t0
+        return times
 
     # ------------------------------------------------------------------ #
     # execution
@@ -591,7 +657,8 @@ class EsamPlan:
         # operands are prepped from the network's *current* arrays (cached on
         # their ids — see _prepare), so a cached plan can never serve stale
         # parameters, yet no decode/bit-slice survives into the call
-        out = self._exec(self._prepare(), x)
+        exec_fn = self._aot.get(x.shape[0])
+        out = (exec_fn or self._exec)(self._prepare(), x)
         out = jax.tree_util.tree_map(
             lambda a: a[:b].reshape(lead + a.shape[1:]), out)
         return PlanResult(**out)

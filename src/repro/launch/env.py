@@ -1,0 +1,94 @@
+"""Tuned runtime environment, shared by CI, the launcher, and benchmarks.
+
+Two cold-start levers live here so every entry point pulls the same ones:
+
+  * **Host-platform mesh flags** — ``--xla_force_host_platform_device_count``
+    turns one CPU into an N-device mesh (how CI exercises dp8 sharding).
+    ``host_device_flags``/``apply_host_devices`` compose the flag into
+    ``XLA_FLAGS`` without clobbering whatever the caller already set.
+  * **Persistent compilation cache** — ``enable_compilation_cache`` points
+    JAX's disk cache at a stable directory with the thresholds zeroed, so a
+    process restart re-warms the engine's whole bucket ladder from disk
+    (``EsamPlan.warmup`` + this cache is what makes cold start instant:
+    measured on this repo's CPU lanes, a cache hit cuts plan compiles by
+    ~3x and repeat warmups to near-zero).
+
+Nothing here imports JAX at module load — ``apply_host_devices`` must be able
+to run before the backend initializes.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+#: default on-disk location of the persistent JAX compilation cache
+DEFAULT_CACHE_DIR = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro-jax-compilation")
+
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def host_device_flags(n_devices: int, base: Optional[str] = None) -> str:
+    """``XLA_FLAGS`` value forcing an ``n_devices`` host-platform mesh,
+    composed with ``base`` (default: the current env var) minus any previous
+    setting of the same flag."""
+    base = os.environ.get("XLA_FLAGS", "") if base is None else base
+    kept = [f for f in base.split() if not f.startswith(HOST_DEVICE_FLAG)]
+    kept.append(f"{HOST_DEVICE_FLAG}={int(n_devices)}")
+    return " ".join(kept)
+
+
+def apply_host_devices(n_devices: int) -> None:
+    """Set ``XLA_FLAGS`` for an ``n_devices`` host mesh, in-process.
+
+    Must run before the JAX backend initializes (before the first
+    ``jax.devices()`` / computation — importing ``jax`` alone is fine).
+    Raises if the backend is already up with a different device count, since
+    the flag would silently not apply.
+    """
+    os.environ["XLA_FLAGS"] = host_device_flags(n_devices)
+    import jax
+
+    if jax._src.xla_bridge._backends:  # already initialized: verify, loudly
+        if len(jax.devices()) != int(n_devices):
+            raise RuntimeError(
+                f"JAX backend already initialized with "
+                f"{len(jax.devices())} devices; {HOST_DEVICE_FLAG} can no "
+                f"longer apply — set XLA_FLAGS before first device use "
+                f"(or use tuned_env() for a subprocess)")
+
+
+def enable_compilation_cache(cache_dir: Optional[str] = None) -> str:
+    """Point JAX's persistent compilation cache at ``cache_dir`` (default
+    ``DEFAULT_CACHE_DIR``) with the size/time thresholds zeroed so every
+    executable — including the engine's small bucket plans — persists.
+    Returns the directory used.  Safe to call repeatedly."""
+    import jax
+
+    d = cache_dir or os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR", DEFAULT_CACHE_DIR)
+    os.makedirs(d, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", d)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    try:  # cache autotune/topology sub-caches too, where the knob exists
+        jax.config.update("jax_persistent_cache_enable_xla_caches", "all")
+    except Exception:
+        pass
+    return d
+
+
+def tuned_env(host_devices: Optional[int] = None,
+              cache_dir: Optional[str] = None) -> dict:
+    """Environment-variable dict for a tuned subprocess launch (CI smoke
+    lanes spawn the launcher with exactly this): host mesh flags, cpu
+    platform pinning, and the persistent-cache directory."""
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if host_devices is not None:
+        env["XLA_FLAGS"] = host_device_flags(
+            host_devices, env.get("XLA_FLAGS", ""))
+    env["JAX_COMPILATION_CACHE_DIR"] = (
+        cache_dir or env.get("JAX_COMPILATION_CACHE_DIR", DEFAULT_CACHE_DIR))
+    return env

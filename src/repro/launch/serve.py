@@ -8,11 +8,23 @@ LM mode (default): batched greedy decoding over the unified LM.
 ESAM mode (``--esam``): synthetic spike traffic served end-to-end through
 the sharded execution plan — requests flow through ``SpikeEngine``'s
 admission queue, power-of-two buckets, and the ``shard_map``-ped packed
-plan when more than one device is visible.  Prints the aggregate paper-unit
-operating point (MInf/s + pJ/Inf) next to the wall-clock serving rate.
+plan when more than one device is visible, with fused multi-round dispatch
+and host/device overlap on by default (``--fuse``/``--no-overlap`` to
+tune).  Prints the aggregate paper-unit operating point (MInf/s + pJ/Inf)
+next to the wall-clock serving rate.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --esam --smoke
+
+Cold start: ``--warmup`` AOT-compiles the engine's whole bucket ladder
+before the first request and prints a greppable ``COLDSTART
+first_request_ms=...`` line; ``--compile-cache [DIR]`` additionally enables
+the persistent JAX compilation cache (``launch/env.py``) so a *restarted*
+server re-warms from disk; ``--host-devices N`` forces an N-device host
+mesh without hand-writing XLA_FLAGS.
+
+    PYTHONPATH=src python -m repro.launch.serve --esam --smoke \
+        --warmup --compile-cache --host-devices 8
 
 Traffic mode (``--traffic``): open-loop Poisson traffic (seeded arrivals,
 mixed static/event blends) through the overload-hardened plane — bounded
@@ -87,26 +99,43 @@ def _esam_main(args):
     if len(jax.devices()) > 1:
         rules = shd.make_esam_rules(shd.esam_data_mesh())
     engine_kw = dict(max_batch=max_batch, telemetry=True,
-                     read_ports=args.read_ports, rules=rules)
+                     read_ports=args.read_ports, rules=rules,
+                     fuse_rounds=_fuse_arg(args), overlap=not args.no_overlap)
 
     x, _ = digits.make_spike_dataset(n_requests, seed=args.seed)
     reqs = [SpikeRequest(spikes=x[i]) for i in range(n_requests)]
-    # warm on a throwaway engine serving the SAME workload shape, so every
-    # bucket the timed run dispatches is already compiled (plans are cached
-    # per network) and the timed engine's stats() see only the timed requests
-    SpikeEngine(net, **engine_kw).serve(
-        [SpikeRequest(spikes=r) for r in x])
     eng = SpikeEngine(net, **engine_kw)
+    if args.warmup:
+        # AOT-compile the whole bucket ladder up front, then time the very
+        # first request the warmed engine serves — the cold-start headline
+        wt = eng.warmup()
+        t0 = time.perf_counter()
+        eng.serve([reqs[0]])
+        first_ms = (time.perf_counter() - t0) * 1e3
+        print(f"COLDSTART first_request_ms={first_ms:.2f} "
+              f"warmup_s={wt['total_s']:.2f} "
+              f"buckets={len(eng._buckets)} "
+              f"cache={'on' if args.compile_cache is not None else 'off'}")
+        reqs_timed = reqs[1:]
+    else:
+        # warm on a throwaway engine serving the SAME workload shape, so
+        # every bucket the timed run dispatches is already compiled (plans
+        # are cached per network) and the timed engine's stats() see only
+        # the timed requests
+        SpikeEngine(net, **engine_kw).serve(
+            [SpikeRequest(spikes=r) for r in x])
+        reqs_timed = reqs
     t0 = time.perf_counter()
-    eng.serve(reqs)
+    eng.serve(reqs_timed)
     wall_s = time.perf_counter() - t0
 
     st = eng.stats()
     print(f"esam-serve: {st['n_requests']} requests "
           f"(data_parallel={st['data_parallel']}, cell={st['cell']}, "
-          f"buckets={eng._buckets})")
+          f"buckets={eng._buckets}, fuse={st['fuse_rounds']}, "
+          f"overlap={st['overlap']}, rounds_saved={st['rounds_saved']})")
     print(f"  wall-clock        : {wall_s*1e3:8.1f} ms  "
-          f"({len(reqs)/wall_s:,.0f} req/s)")
+          f"({len(reqs_timed)/wall_s:,.0f} req/s)")
     print(f"  model throughput  : {st['throughput_pipelined_inf_s']/1e6:8.2f} MInf/s "
           f"(pipelined; paper {cm.PAPER_THROUGHPUT_INF_S/1e6:.0f})")
     print(f"  model energy      : {st['energy_pj_per_inf']:8.1f} pJ/Inf "
@@ -190,6 +219,7 @@ def _traffic_main(args):
         return SpikeEngine(
             net, max_batch=max_batch, telemetry=True,
             read_ports=args.read_ports, queue_limit=4 * max_batch,
+            fuse_rounds=_fuse_arg(args), overlap=not args.no_overlap,
             ladder=DegradationLadder.default(max_batch, args.read_ports))
 
     # closed-loop warmup on the same request blend: first pass compiles
@@ -227,6 +257,9 @@ def _traffic_main(args):
         rate_hz=rate, n_requests=n_requests, seed=args.seed,
         p_event=args.p_event, event_t_choices=(2, 4),
         n_in=topology[0], deadline_s=deadline_s)
+    if args.warmup:
+        from repro.serve.traffic import warmup_engine
+        warmup_engine(server, cfg)
     rep = run_open_loop(server, cfg, slo_s=slo_s, chaos=chaos)
 
     print(f"esam-traffic: offered {rep.n_offered} requests @ {rate:,.0f}/s "
@@ -246,6 +279,15 @@ def _traffic_main(args):
     print(f"  degradation       : {rep.ladder_transitions} transitions, "
           f"deepest level {rep.max_degradation_level}; "
           f"backpressure events {rep.backpressure_events}")
+
+
+def _fuse_arg(args):
+    """Resolve --fuse: "auto" (default) | "off" | an integer factor."""
+    if args.fuse in ("off", "none", "0"):
+        return None
+    if args.fuse == "auto":
+        return "auto"
+    return int(args.fuse)
 
 
 def main():
@@ -284,7 +326,29 @@ def main():
     ap.add_argument("--leak", type=float, default=0.125,
                     help="--events: LIF leak per timestep")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fuse", default="auto",
+                    help="round fusion factor: 'auto' (= dp degree), "
+                         "'off', or an integer")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the background host packer "
+                         "(synchronous legacy drain)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the bucket ladder before serving and "
+                         "print COLDSTART first-request latency")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force an N-device host-platform mesh "
+                         "(XLA_FLAGS, applied before backend init)")
+    ap.add_argument("--compile-cache", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="enable the persistent JAX compilation cache "
+                         "(optional directory; default "
+                         "~/.cache/repro-jax-compilation)")
     args = ap.parse_args()
+    from repro.launch import env as env_mod
+    if args.host_devices is not None:
+        env_mod.apply_host_devices(args.host_devices)
+    if args.compile_cache is not None:
+        env_mod.enable_compilation_cache(args.compile_cache or None)
     if args.traffic:
         _traffic_main(args)
     elif args.events:

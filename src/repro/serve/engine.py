@@ -18,8 +18,12 @@ on (batch, T) and drained through the membrane-resident temporal plan
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
+import math
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 import jax
@@ -161,6 +165,24 @@ class EventRequest:
         return int(np.asarray(self.events).shape[0])
 
 
+@functools.lru_cache(maxsize=None)
+def _stats_jit(topology: tuple, read_ports: int, temporal: bool):
+    """One jitted device-side cost function per (topology, ports, mode).
+
+    The eager ``request_stats_device`` dispatches ~20 tiny jnp ops per tile;
+    on a sharded mesh each one fans out across every device, and that host
+    overhead — not the datapath — dominated the dp8 round time.  Jitting
+    collapses the whole accounting into ONE dispatch.  Module-level cache so
+    every engine (sync or fused, any replica) shares the same compiled
+    executable — which also makes their telemetry bit-identical by
+    construction."""
+    from repro.core.esam import cost_model as cm
+
+    fn = (cm.temporal_request_stats_device if temporal
+          else cm.request_stats_device)
+    return jax.jit(lambda loads: fn(topology, loads, read_ports))
+
+
 def _bucket_sizes(max_batch: int, min_bucket: int, dp: int) -> list[int]:
     """Power-of-two bucket ladder: min_bucket, 2*min_bucket, ... >= max_batch.
 
@@ -203,9 +225,28 @@ class SpikeEngine:
     (where the running aggregate folds into exact float64 totals, immune to
     float32 drift over long-lived engines), and ``stats()`` is a pure host
     read.
+
+    **Fused async dispatch** (the dp-scaling plane): ``fuse_rounds``
+    coalesces up to that many legacy bucket-rounds into ONE super-batch
+    dispatch per drain step (``"auto"`` = the data-parallel degree, so dp8
+    issues ~1/8th the rounds over 8x the batch; the bucket ladder is
+    extended to ``max_batch * fuse`` and every super-batch stays dp-aligned).
+    The fused path is bit-identical per row to the per-bucket path — the
+    binary CIM MAC is row-independent and zero padding is exact — so fusion
+    changes *when* work is dispatched, never *what* is computed
+    (property-tested).  ``overlap=True`` double-buffers the host side: a
+    background packer thread builds round N+1's wire-format batch while
+    round N's dispatch runs, through a bounded depth-2 ring (no
+    ``block_until_ready`` anywhere in the drain — results stay device-side
+    until the flush).  A degraded ladder level may cap fusion
+    (``LadderLevel.fuse_cap``) so shed/deadline sweeps stay frequent under
+    pressure.  ``warmup()`` AOT-compiles the whole bucket ladder (and the
+    event (bucket, T) grid) ahead of the first request.
     """
 
     def __init__(self, net, *, max_batch: int = 128, min_bucket: int = 8,
+                 fuse_rounds=None,  # None | "auto" | int >= 1
+                 overlap: bool = False,
                  interpret: Optional[bool] = None,
                  telemetry: bool = False, read_ports: int = 4,
                  temporal=None,  # Optional[temporal.TemporalConfig]
@@ -273,19 +314,34 @@ class SpikeEngine:
             "rounds_static": 0, "rounds_event": 0,
             "rows_real": 0, "rows_padded": 0,
             "host_pack_s": 0.0, "dispatch_s": 0.0,
+            "fused_rounds": 0, "rounds_saved": 0,
         }
         self._rounds_per_bucket: dict[int, int] = {}
         self._padded_rows_per_bucket: dict[int, int] = {}
+        self._real_rows_per_bucket: dict[int, int] = {}
         # LIF dynamics template for event-stream requests; n_steps is taken
         # from each request (per-request T), the rest from this config.  The
         # default (zero leak, zero reset) makes a T=1 event request
         # bit-identical to the static packed path.
         self._temporal = temporal or temporal_mod.TemporalConfig(n_steps=1)
         dp = 1 if rules is None else rules.axis_size("spike_batch")
-        self._buckets = _bucket_sizes(max_batch, min_bucket, dp)
+        # round fusion: how many legacy bucket-rounds may coalesce into one
+        # super-batch dispatch ("auto" tracks the dp degree so the dispatch
+        # count drops ~1/dp); the bucket ladder is extended to cover the
+        # fused super-batches.  fuse=1 (default) is the legacy drain.
+        if fuse_rounds is not None and fuse_rounds != "auto":
+            assert int(fuse_rounds) >= 1, fuse_rounds
+        self._fuse_arg = fuse_rounds
+        self._fuse = self._fuse_factor(dp)
+        self._overlap = bool(overlap)
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._buckets = _bucket_sizes(max_batch * self._fuse, min_bucket, dp)
+        # the engine owns every array it hands the plan (packed fresh per
+        # round), so the input buffer is donated — XLA reuses the allocation
+        # across drain rounds instead of re-allocating per dispatch
         self._plan = net.plan(
             mode="packed", telemetry=telemetry, interpret=interpret,
-            faults=faults, rules=rules)
+            faults=faults, rules=rules, donate=True)
         n_tiles = len(net.topology) - 1
         # tile-health calibration: expected mean drain cycles per tile on the
         # reference activity profile (the paper's 53%/50% calibration point).
@@ -383,36 +439,172 @@ class SpikeEngine:
         else:
             out = list(self._pending) + list(self._pending_events)
         self._shed_expired()
-        while self._pending:
-            self._ladder_tick()
-            limit = self._round_limit()
-            round_reqs = self._pending[: limit]
-            del self._pending[: limit]
-            self._timed_round(self._dispatch, round_reqs)
-            self._shed_expired()
-        while self._pending_events:
-            # one continuous-batching round per (batch, T) bucket: take the
-            # head request's T and everything sharing it, in arrival order.
-            # A degraded ladder level caps T, so streams whose effective
-            # (truncated) T coincides share a round.
-            self._ladder_tick()
-            limit = self._round_limit()
-            t_cap = self._level().event_t_cap
-            t = self._pending_events[0].n_steps
-            if t_cap is not None:
-                t = min(t, t_cap)
-            round_reqs, rest = [], []
-            for r in self._pending_events:
-                eff = r.n_steps if t_cap is None else min(r.n_steps, t_cap)
-                if eff == t and len(round_reqs) < limit:
-                    round_reqs.append(r)
-                else:
-                    rest.append(r)
-            self._pending_events = rest
-            self._timed_round(self._dispatch_events, round_reqs, t)
-            self._shed_expired()
+        self._drain_static()
+        self._drain_events()
         self._flush()
         return out
+
+    # -------------------------------------------------------------- #
+    # drain loops: synchronous (legacy) and overlapped (double-buffered)
+    # -------------------------------------------------------------- #
+    def _pop_static_round(self) -> list[SpikeRequest]:
+        """Pop one round's worth of static requests (up to the fused
+        budget — ``fuse_rounds`` legacy rounds coalesced)."""
+        self._ladder_tick()
+        budget = self._round_budget()
+        reqs = self._pending[: budget]
+        del self._pending[: budget]
+        return reqs
+
+    def _pop_event_round(self) -> tuple[list[EventRequest], int]:
+        """Pop one (batch, T) event round: the head request's effective T
+        and everything sharing it, in arrival order, up to the fused budget.
+        A degraded ladder level caps T, so streams whose effective
+        (truncated) T coincides share a round."""
+        self._ladder_tick()
+        budget = self._round_budget()
+        t_cap = self._level().event_t_cap
+        t = self._pending_events[0].n_steps
+        if t_cap is not None:
+            t = min(t, t_cap)
+        round_reqs, rest = [], []
+        for r in self._pending_events:
+            eff = r.n_steps if t_cap is None else min(r.n_steps, t_cap)
+            if eff == t and len(round_reqs) < budget:
+                round_reqs.append(r)
+            else:
+                rest.append(r)
+        self._pending_events = rest
+        return round_reqs, t
+
+    def _drain_static(self) -> None:
+        if self._overlap:
+            self._drain_overlap("_pending", self._form_static_round)
+            return
+        while self._pending:
+            self._timed_round(self._dispatch, self._pop_static_round())
+            self._shed_expired()
+
+    def _drain_events(self) -> None:
+        if self._overlap:
+            self._drain_overlap("_pending_events", self._form_event_round)
+            return
+        while self._pending_events:
+            round_reqs, t = self._pop_event_round()
+            self._timed_round(self._dispatch_events, round_reqs, t)
+            self._shed_expired()
+
+    def _form_static_round(self):
+        """Pop a round and split it into (pack, launch) halves so the pack
+        (host numpy) can run on the packer thread while the previous round's
+        dispatch is in flight.  Everything the closures touch is captured
+        here on the main thread; ``launch`` runs JAX calls on the main
+        thread only."""
+        reqs = self._pop_static_round()
+        bucket = self._bucket(len(reqs))
+        return (lambda: self._pack_static(reqs, bucket),
+                lambda packed, pack_s: self._launch_static(
+                    reqs, bucket, packed, pack_s))
+
+    def _form_event_round(self):
+        reqs, t = self._pop_event_round()
+        bucket = self._bucket(len(reqs))
+        for r in reqs:
+            r.served_steps = t
+        events = [np.asarray(r.events) for r in reqs]  # capture on main thread
+        return (lambda: self._pack_events(events, t, bucket),
+                lambda packed, pack_s: self._launch_events(
+                    reqs, bucket, t, packed, pack_s))
+
+    def _drain_overlap(self, queue_name: str, form) -> None:
+        """Double-buffered drain: a bounded depth-2 ring of formed rounds —
+        the packer thread builds round N+1's wire-format batch while round
+        N's dispatch call runs on the main thread.  The watchdog times the
+        dispatch half only (pack time is recorded separately per round, as
+        always).  A raising round hook (chaos crash) aborts with formed
+        rounds popped-but-unserved — exactly the crash-mid-drain state the
+        router's retry path recovers."""
+        pool = self._packer_pool()
+        ring: collections.deque = collections.deque()
+        try:
+            while getattr(self, queue_name) or ring:
+                while getattr(self, queue_name) and len(ring) < 2:
+                    pack, launch = form()
+                    ring.append((pool.submit(pack), launch))
+                fut, launch = ring.popleft()
+                packed, pack_s = fut.result()
+                self._timed_round(launch, packed, pack_s)
+                self._shed_expired()
+        finally:
+            while ring:
+                ring.popleft()[0].cancel()
+
+    def _packer_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="spike-packer")
+        return self._pool
+
+    def close(self) -> None:
+        """Shut down the background packer thread (no-op when never used)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -------------------------------------------------------------- #
+    # cold start: AOT-compile the bucket ladder before the first request
+    # -------------------------------------------------------------- #
+    def warmup(self, *, event_ts=(), aot: bool = True) -> dict:
+        """Compile every shape the drain loop can dispatch, ahead of time.
+
+        The static plan is AOT-compiled for the engine's whole bucket
+        ladder; ``event_ts`` additionally warms the temporal (bucket, T)
+        grid — the set is expanded with the degradation ladder's
+        ``event_t_cap`` rungs so degraded rounds stay warm too.  With the
+        persistent compilation cache enabled (``launch/env.py``) a restart
+        re-warms from disk in milliseconds.  Returns per-shape compile
+        seconds plus ``total_s``; after it, serving any warmed shape
+        performs zero compilation (regression-tested).
+        """
+        t0 = time.perf_counter()
+        times: dict = {"static": self._plan.warmup(self._buckets, aot=aot)}
+        ts = {int(t) for t in event_ts}
+        if ts and self._ladder is not None:
+            caps = {lv.event_t_cap for lv in self._ladder.levels
+                    if lv.event_t_cap is not None}
+            ts |= {min(t, c) for t in set(ts) for c in caps}
+        for t in sorted(ts):
+            times[f"event_t{t}"] = self._event_plan(t).warmup(
+                self._buckets, aot=aot)
+        if self.telemetry:
+            # the jitted cost accounting's dispatch cache keys on the
+            # *sharding* of the plan's load outputs, not just their shapes —
+            # warm it on real (zeros) plan outputs so the first served round
+            # pays no compile outside the plan either.  Nothing is recorded:
+            # counters, telemetry totals and the inflight ring stay
+            # untouched.
+            topo = self.net.topology
+            width = self._packing.packed_width(self.n_in)
+            ports = self._effective_read_ports()
+            tw0 = time.perf_counter()
+            for b in self._buckets:
+                res = self._plan(jnp.zeros((b, width), jnp.uint32))
+                jax.block_until_ready(
+                    _stats_jit(topo, ports, False)(res.loads))
+                for t in sorted(ts):
+                    resT = self._event_plan(t)(
+                        jnp.zeros((t, b, width), jnp.uint32))
+                    jax.block_until_ready(
+                        _stats_jit(topo, ports, True)(resT.loads))
+            times["telemetry_s"] = time.perf_counter() - tw0
+        times["total_s"] = time.perf_counter() - t0
+        return times
 
     # -------------------------------------------------------------- #
     # overload plane: deadline shedding + degradation ladder
@@ -449,6 +641,24 @@ class SpikeEngine:
         cap = self._level().bucket_cap
         return self.max_batch if cap is None else max(1, min(self.max_batch,
                                                              cap))
+
+    def _fuse_factor(self, dp: int) -> int:
+        """Resolve the ``fuse_rounds`` knob: None => 1 (legacy drain),
+        ``"auto"`` => the data-parallel degree (dp8 fuses 8 legacy rounds
+        into one sharded super-batch), an int => itself."""
+        if self._fuse_arg is None:
+            return 1
+        if self._fuse_arg == "auto":
+            return max(1, int(dp))
+        return max(1, int(self._fuse_arg))
+
+    def _round_budget(self) -> int:
+        """Requests per dispatch round: the ladder's bucket ceiling times
+        the fusion factor (itself capped by the level's ``fuse_cap`` so a
+        degraded engine sweeps deadlines between smaller rounds)."""
+        cap = self._level().fuse_cap
+        fuse = self._fuse if cap is None else max(1, min(self._fuse, cap))
+        return self._round_limit() * fuse
 
     def _effective_read_ports(self) -> int:
         ports = self._level().read_ports
@@ -519,76 +729,121 @@ class SpikeEngine:
         return self._buckets[-1]
 
     def _note_round(self, kind: str, bucket: int, n_real: int,
-                    pack_s: float, dispatch_s: float) -> None:
-        """Fold one round into the host-sync observability aggregates."""
+                    pack_s: float, dispatch_s: float,
+                    n_legacy: int = 1) -> None:
+        """Fold one round into the host-sync observability aggregates.
+        ``n_legacy`` is how many legacy (un-fused) bucket-rounds this
+        dispatch replaced — rounds where it exceeds 1 count as fused and
+        the difference accumulates in ``rounds_saved``."""
         c = self._round_counters
         c[f"rounds_{kind}"] += 1
         c["rows_real"] += n_real
         c["rows_padded"] += bucket - n_real
         c["host_pack_s"] += pack_s
         c["dispatch_s"] += dispatch_s
+        if n_legacy > 1:
+            c["fused_rounds"] += 1
+            c["rounds_saved"] += n_legacy - 1
         self._rounds_per_bucket[bucket] = (
             self._rounds_per_bucket.get(bucket, 0) + 1)
         self._padded_rows_per_bucket[bucket] = (
             self._padded_rows_per_bucket.get(bucket, 0) + bucket - n_real)
+        self._real_rows_per_bucket[bucket] = (
+            self._real_rows_per_bucket.get(bucket, 0) + n_real)
 
-    def _dispatch(self, reqs: list[SpikeRequest]) -> None:
-        """One continuous-batching round: pad to bucket, run the plan, keep
-        every result device-side (no host sync here).  Host pack time and
-        dispatch-call time are recorded separately per bucket — the
-        observability needed to attribute dp-scaling regressions to host
-        sync vs tiny per-bucket dispatches."""
-        bucket = self._bucket(len(reqs))
+    def _n_legacy(self, n: int) -> int:
+        """Legacy bucket-rounds a super-batch of ``n`` requests replaces."""
+        return max(1, math.ceil(n / self._round_limit()))
+
+    def _pack_static(self, reqs: list[SpikeRequest],
+                     bucket: int) -> tuple[np.ndarray, float]:
+        """Host half of a static round: bit-pack to the padded wire format
+        (pure numpy — safe on the packer thread)."""
         t0 = time.perf_counter()
-        packed = jnp.asarray(self._packing.pack_padded_rows_np(
-            [r.spikes for r in reqs], bucket, self.n_in))
+        packed = self._packing.pack_padded_rows_np(
+            [r.spikes for r in reqs], bucket, self.n_in)
+        return packed, time.perf_counter() - t0
+
+    def _launch_static(self, reqs: list[SpikeRequest], bucket: int,
+                       packed: np.ndarray, pack_s: float) -> None:
+        """Device half: run the plan, keep every result device-side (no
+        host sync here).  Pack time and dispatch-call time are recorded
+        separately per bucket — the observability that attributed the dp8
+        regression to host sync + tiny per-bucket dispatches."""
         t1 = time.perf_counter()
-        res = self._plan(packed)
+        res = self._plan(jnp.asarray(packed))
         rs = None
         if self.telemetry:
             # lazy device-side cost — nothing is synced inside the drain loop
-            rs = self._cm.request_stats_device(
-                self.net.topology, res.loads, self._effective_read_ports())
+            rs = _stats_jit(self.net.topology, self._effective_read_ports(),
+                            False)(res.loads)
         t2 = time.perf_counter()
-        self._note_round("static", bucket, len(reqs), t1 - t0, t2 - t1)
+        self._note_round("static", bucket, len(reqs), pack_s, t2 - t1,
+                         self._n_legacy(len(reqs)))
         self._served += len(reqs)
         self._inflight.append((reqs, res.logits, rs))
 
-    def _dispatch_events(self, reqs: list[EventRequest], n_steps: int) -> None:
-        """One event round: same-T requests padded to a batch bucket and run
-        through the temporal plan (compiled once per (batch, T) shape); the
-        stream cost stays device-side like the static path's.  ``n_steps``
-        is the *effective* T — a degraded ladder level truncates longer
-        streams to it (recorded per request as ``served_steps``)."""
+    def _dispatch(self, reqs: list[SpikeRequest]) -> None:
+        """One continuous-batching round (synchronous path): pad to bucket,
+        pack, launch."""
         bucket = self._bucket(len(reqs))
+        packed, pack_s = self._pack_static(reqs, bucket)
+        self._launch_static(reqs, bucket, packed, pack_s)
+
+    def _event_plan(self, n_steps: int):
+        """The (donated) temporal plan for effective stream length
+        ``n_steps`` — cached per (batch-invariant) spec on the network."""
+        cfg = dataclasses.replace(self._temporal, n_steps=n_steps)
+        return self.net.plan(
+            mode="temporal", temporal=cfg, telemetry=self.telemetry,
+            interpret=self._interpret, faults=self.faults, rules=self.rules,
+            donate=True)
+
+    def _pack_events(self, events: list[np.ndarray], n_steps: int,
+                     bucket: int) -> tuple[np.ndarray, float]:
+        """Host half of an event round (pure numpy — packer-thread safe)."""
         width = self._packing.packed_width(self.n_in)
         t0 = time.perf_counter()
         packed = np.zeros((n_steps, bucket, width), np.uint32)
-        for i, r in enumerate(reqs):
-            ev = np.asarray(r.events)
+        for i, ev in enumerate(events):
             assert ev.shape[0] >= n_steps, (ev.shape, n_steps)
-            r.served_steps = n_steps
             if ev.dtype == np.uint32 and ev.shape[-1] == width:
                 packed[:, i] = ev[:n_steps]
             else:
                 assert ev.shape[1:] == (self.n_in,), (ev.shape, self.n_in)
                 packed[:, i] = self._packing.pack_spikes_np(
                     ev[:n_steps] != 0)
+        return packed, time.perf_counter() - t0
+
+    def _launch_events(self, reqs: list[EventRequest], bucket: int,
+                       n_steps: int, packed: np.ndarray,
+                       pack_s: float) -> None:
         t1 = time.perf_counter()
-        cfg = dataclasses.replace(self._temporal, n_steps=n_steps)
-        plan = self.net.plan(
-            mode="temporal", temporal=cfg, telemetry=self.telemetry,
-            interpret=self._interpret, faults=self.faults, rules=self.rules)
-        res = plan(jnp.asarray(packed))
+        res = self._event_plan(n_steps)(jnp.asarray(packed))
         rs = None
         if self.telemetry:
-            rs = self._cm.temporal_request_stats_device(
-                self.net.topology, res.loads, self._effective_read_ports())
+            rs = _stats_jit(self.net.topology, self._effective_read_ports(),
+                            True)(res.loads)
         t2 = time.perf_counter()
-        self._note_round("event", bucket, len(reqs), t1 - t0, t2 - t1)
+        self._note_round("event", bucket, len(reqs), pack_s, t2 - t1,
+                         self._n_legacy(len(reqs)))
         self._served_events += len(reqs)
         self._served_timesteps += len(reqs) * n_steps
         self._inflight.append((reqs, res.logits, rs))
+
+    def _dispatch_events(self, reqs: list[EventRequest], n_steps: int) -> None:
+        """One event round (synchronous path): same-T requests padded to a
+        batch bucket and run through the temporal plan (compiled once per
+        (batch, T) shape); the stream cost stays device-side like the
+        static path's.  ``n_steps`` is the *effective* T — a degraded
+        ladder level truncates longer streams to it (recorded per request
+        as ``served_steps``)."""
+        bucket = self._bucket(len(reqs))
+        for r in reqs:
+            r.served_steps = n_steps
+        events = [np.asarray(r.events) for r in reqs]
+        packed, pack_s = self._pack_events(events, n_steps, bucket)
+        self._launch_events(reqs, bucket, n_steps, packed, pack_s)
 
     def _flush(self) -> None:
         """Attach logits/labels (+ per-request cost) and fold the telemetry
@@ -671,15 +926,31 @@ class SpikeEngine:
         self.rules = (shd.make_esam_rules(shd.esam_data_mesh(data))
                       if data > 1 else None)
         dp = 1 if self.rules is None else self.rules.axis_size("spike_batch")
-        self._buckets = _bucket_sizes(self.max_batch, self._min_bucket, dp)
+        self._fuse = self._fuse_factor(dp)   # "auto" tracks the new mesh
+        self._buckets = _bucket_sizes(
+            self.max_batch * self._fuse, self._min_bucket, dp)
         self._plan = self.net.plan(
             mode="packed", telemetry=self.telemetry,
-            interpret=self._interpret, faults=self.faults, rules=self.rules)
+            interpret=self._interpret, faults=self.faults, rules=self.rules,
+            donate=True)
         return plan
 
     # -------------------------------------------------------------- #
     # aggregate telemetry
     # -------------------------------------------------------------- #
+    def _pad_fraction_per_bucket(self) -> dict[int, float]:
+        """Per-bucket pad overhead, safe under fused rounds: a bucket a
+        fused super-batch only ever grazed (or that saw zero real rows — a
+        formed-but-crashed round) divides by its total rows, never by
+        zero."""
+        out = {}
+        for b in sorted(set(self._padded_rows_per_bucket)
+                        | set(self._real_rows_per_bucket)):
+            pad = self._padded_rows_per_bucket.get(b, 0)
+            real = self._real_rows_per_bucket.get(b, 0)
+            out[b] = pad / (pad + real) if (pad + real) else 0.0
+        return out
+
     def stats(self) -> dict:
         """Aggregate hardware-cost telemetry in paper units.
 
@@ -730,8 +1001,16 @@ class SpikeEngine:
                       + self._round_counters["rows_padded"])),
             "rounds_per_bucket": dict(self._rounds_per_bucket),
             "padded_rows_per_bucket": dict(self._padded_rows_per_bucket),
+            "real_rows_per_bucket": dict(self._real_rows_per_bucket),
+            "pad_fraction_per_bucket": self._pad_fraction_per_bucket(),
             "host_pack_s_total": self._round_counters["host_pack_s"],
             "dispatch_s_total": self._round_counters["dispatch_s"],
+            # fused async dispatch (the dp-scaling fix): configuration plus
+            # evidence of fewer, larger rounds
+            "fuse_rounds": self._fuse,
+            "overlap": self._overlap,
+            "fused_rounds": self._round_counters["fused_rounds"],
+            "rounds_saved": self._round_counters["rounds_saved"],
             # event-stream aggregates (temporal plane)
             "n_event_requests": ne,
             "timesteps_total": nt,

@@ -53,12 +53,17 @@ class LadderLevel:
                         read ports = lower energy per access).
     ``bucket_cap``    — ceiling on the continuous-batching round size (and so
                         on the padded bucket), keeping per-round latency low.
+    ``fuse_cap``      — ceiling on the engine's round-fusion factor (how many
+                        legacy bucket-rounds may coalesce into one super-batch
+                        dispatch).  Degraded rungs cap fusion so a shed/deadline
+                        sweep between rounds stays frequent under pressure.
     """
 
     name: str
     event_t_cap: Optional[int] = None
     read_ports: Optional[int] = None
     bucket_cap: Optional[int] = None
+    fuse_cap: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +113,8 @@ class DegradationLadder:
             LadderLevel("full"),
             LadderLevel("reduced_t", event_t_cap=8),
             LadderLevel("economy", event_t_cap=4,
-                        read_ports=max(1, read_ports // 2), bucket_cap=half),
+                        read_ports=max(1, read_ports // 2), bucket_cap=half,
+                        fuse_cap=2),
             LadderLevel("survival", event_t_cap=2, read_ports=1,
-                        bucket_cap=quarter),
+                        bucket_cap=quarter, fuse_cap=1),
         ))

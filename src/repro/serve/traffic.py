@@ -98,6 +98,21 @@ def build_requests(cfg: TrafficConfig, *, chaos: "ChaosConfig" = None):
     return reqs, arr
 
 
+def warmup_engine(server, cfg: TrafficConfig, *, aot: bool = True) -> dict:
+    """AOT-warm every (bucket, T) shape an open-loop run of ``cfg`` can
+    dispatch — the whole static bucket ladder, plus the temporal grid for
+    each T the blend can draw (``event_t_choices`` when ``p_event > 0``;
+    degraded-ladder t-caps are expanded inside ``SpikeEngine.warmup``).
+    Router-aware: warms every replica behind a ``FaultAwareRouter``.
+    Returns ``{replica_index: warmup_times}``."""
+    engines = (server.engines if isinstance(server, FaultAwareRouter)
+               else [server])
+    ts = (tuple(int(t) for t in cfg.event_t_choices)
+          if cfg.p_event > 0 else ())
+    return {i: eng.warmup(event_ts=ts, aot=aot)
+            for i, eng in enumerate(engines)}
+
+
 # ------------------------------------------------------------------ #
 # chaos harness
 # ------------------------------------------------------------------ #

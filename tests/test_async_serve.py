@@ -1,0 +1,410 @@
+"""Asynchronous fused-dispatch drain loop: the zero-pressure property
+(fused + overlapped drain is bit-identical to the synchronous drain — outputs
+AND telemetry), fused-round counters, deadline interleavings, AOT warmup
+(no compile left in the serve path), and the dp8 super-batch path on the
+8-device host-platform mesh (subprocess, XLA_FLAGS)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.esam.network import EsamNetwork
+from repro.serve.engine import (EventRequest, SpikeEngine, SpikeRequest,
+                                _stats_jit)
+
+
+def _net(key=None, topo=(128, 128, 10)):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n_tiles = len(topo) - 1
+    bits = [
+        jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i + 1])).astype(jnp.int8)
+        for i in range(n_tiles)
+    ]
+    vth = [jnp.zeros((topo[i + 1],), jnp.int32) for i in range(n_tiles)]
+    return EsamNetwork(weight_bits=bits, vth=vth,
+                       out_offset=jnp.zeros((topo[-1],), jnp.float32))
+
+
+def _spike_reqs(n, n_in=128, seed=0):
+    return [
+        SpikeRequest(spikes=(np.random.default_rng((seed, i)).random(n_in)
+                             < 0.3).astype(np.uint8))
+        for i in range(n)
+    ]
+
+
+def _event_reqs(n, t, n_in=128, seed=100):
+    return [
+        EventRequest(events=(np.random.default_rng((seed, i))
+                             .random((t, n_in)) < 0.3).astype(np.uint8))
+        for i in range(n)
+    ]
+
+
+def _mixed(n_static, event_spec, seed=0):
+    """n_static static requests + one batch of event streams per (n, t)."""
+    reqs = _spike_reqs(n_static, seed=seed)
+    for j, (n, t) in enumerate(event_spec):
+        reqs += _event_reqs(n, t, seed=seed + 1000 + j)
+    return reqs
+
+
+_TELEMETRY_FIELDS = ("cycles", "latency_ns", "energy_pj")
+
+
+def _assert_same_results(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.status == w.status, (g.status, w.status)
+        if w.logits is None:
+            assert g.logits is None
+            continue
+        np.testing.assert_array_equal(np.asarray(g.logits),
+                                      np.asarray(w.logits))
+        assert g.label == w.label
+        for f in _TELEMETRY_FIELDS:
+            gv, wv = getattr(g, f, None), getattr(w, f, None)
+            if wv is None:
+                assert gv is None, f
+            else:
+                np.testing.assert_array_equal(np.asarray(gv),
+                                              np.asarray(wv), err_msg=f)
+
+
+# ----------------------------------------------------------------------- #
+# the zero-pressure property: async fused drain == synchronous drain
+# ----------------------------------------------------------------------- #
+@settings(max_examples=8, deadline=None)
+@given(n_static=st.integers(0, 40),
+       n_ev2=st.integers(0, 9),
+       n_ev4=st.integers(0, 9),
+       fuse=st.sampled_from([2, 4, "auto"]),
+       overlap=st.booleans(),
+       seed=st.integers(0, 3))
+def test_fused_drain_bit_identical_to_sync(n_static, n_ev2, n_ev4, fuse,
+                                           overlap, seed):
+    """Property: under zero pressure (no deadlines, no admission limits) the
+    fused + overlapped drain serves mixed static/event traffic bit-identically
+    to the synchronous drain — logits, labels, AND per-request telemetry."""
+    net = _net()
+    spec = [(n_ev2, 2), (n_ev4, 4)]
+    sync = SpikeEngine(net, interpret=True, max_batch=8, telemetry=True)
+    a = _mixed(n_static, spec, seed=seed)
+    sync.serve(a)
+
+    fused = SpikeEngine(net, interpret=True, max_batch=8, telemetry=True,
+                        fuse_rounds=fuse, overlap=overlap)
+    b = _mixed(n_static, spec, seed=seed)
+    fused.serve(b)
+    _assert_same_results(b, a)
+
+    # aggregate telemetry (exact float64 fold) agrees too
+    ss, fs = sync.stats(), fused.stats()
+    for key in ("n_requests", "cycles_mean", "latency_ns_mean",
+                "energy_pj_per_inf"):
+        assert ss[key] == fs[key], key
+    fused.close()
+
+
+def test_fused_counters_and_rounds_saved():
+    """fuse_rounds=4 coalesces what would be 4 legacy bucket-rounds into one
+    dispatch and books the savings in fused_rounds / rounds_saved."""
+    eng = SpikeEngine(_net(), interpret=True, max_batch=8, fuse_rounds=4)
+    eng.serve(_spike_reqs(32))
+    st_ = eng.stats()
+    assert st_["rounds_static"] == 1
+    assert st_["fused_rounds"] == 1
+    assert st_["rounds_saved"] == 3
+    assert st_["fuse_rounds"] == 4
+    eng.close()
+
+    # sync engine books nothing
+    sync = SpikeEngine(_net(), interpret=True, max_batch=8)
+    sync.serve(_spike_reqs(32))
+    st_ = sync.stats()
+    assert st_["fused_rounds"] == 0 and st_["rounds_saved"] == 0
+    assert st_["rounds_static"] == 4
+
+
+def test_stats_division_guards_under_fused_rounds():
+    """The per-bucket aggregates never divide by zero — empty engine, a
+    served fused engine, and an all-padding bucket all yield finite stats."""
+    eng = SpikeEngine(_net(), interpret=True, max_batch=8, fuse_rounds=4,
+                      telemetry=True)
+    st_ = eng.stats()                      # nothing served yet
+    assert st_["pad_fraction_per_bucket"] == {}
+    for key in ("cycles_mean", "latency_ns_mean", "energy_pj_per_inf"):
+        assert st_[key] == 0.0
+
+    eng.serve(_spike_reqs(9))              # 9 real rows in a 16-bucket
+    st_ = eng.stats()
+    for bucket, frac in st_["pad_fraction_per_bucket"].items():
+        assert 0.0 <= frac < 1.0, (bucket, frac)
+        real = st_["real_rows_per_bucket"][bucket]
+        padded = st_["padded_rows_per_bucket"][bucket]
+        assert frac == padded / (padded + real)
+    assert st_["rows_real_total"] == 9
+    eng.close()
+
+
+# ----------------------------------------------------------------------- #
+# deadline / shed interleavings
+# ----------------------------------------------------------------------- #
+@settings(max_examples=6, deadline=None)
+@given(expired=st.lists(st.integers(0, 19), min_size=0, max_size=8),
+       fuse=st.sampled_from([1, 2, 4]),
+       overlap=st.booleans())
+def test_expired_deadlines_shed_identically_under_fusion(expired, fuse,
+                                                         overlap):
+    """Already-expired requests shed identically in sync and fused drains,
+    and every survivor's outputs stay bit-identical (fusion changes round
+    boundaries, never results)."""
+    expired = set(expired)
+
+    def run(fuse_arg, ov):
+        t = [0.0]
+        eng = SpikeEngine(_net(), interpret=True, max_batch=4,
+                          telemetry=True, fuse_rounds=fuse_arg, overlap=ov,
+                          clock=lambda: t[0])
+        reqs = _mixed(14, [(6, 2)], seed=5)
+        for i in expired:
+            reqs[i].deadline_s = -1.0      # expired before the drain starts
+        eng.serve(reqs)
+        st_ = eng.stats()
+        eng.close()
+        return reqs, st_
+
+    a, sa = run(None, False)
+    b, sb = run(fuse, overlap)
+    _assert_same_results(b, a)
+    assert sa["shed_deadline"] == sb["shed_deadline"] == len(expired)
+
+
+def test_mid_drain_deadline_sweep_still_runs_between_fused_rounds():
+    """Deadlines are swept between fused rounds: requests whose deadline
+    passes after round 1 of a fused drain are shed, not served late."""
+    t = [0.0]
+    eng = SpikeEngine(_net(), interpret=True, max_batch=4, fuse_rounds=2,
+                      clock=lambda: t[0])
+    orig = eng._launch_static
+
+    def advancing(reqs, bucket, packed, pack_s):
+        orig(reqs, bucket, packed, pack_s)
+        t[0] += 1.0
+
+    eng._launch_static = advancing
+    reqs = _spike_reqs(20)
+    for r in reqs:
+        r.deadline_s = 0.5
+    eng.serve(reqs)
+    done = [r for r in reqs if r.status == "done"]
+    shed = [r for r in reqs if r.status == "shed"]
+    # one fused round of 2*max_batch dispatches; everything else sheds
+    assert len(done) == 8 and len(shed) == 12
+    assert eng.stats()["shed_deadline"] == 12
+    eng.close()
+
+
+# ----------------------------------------------------------------------- #
+# AOT warmup: no compile left in the serve path
+# ----------------------------------------------------------------------- #
+def test_warmup_leaves_no_compile_in_static_serve_path():
+    """After warmup() the static serve path runs entirely through the AOT
+    executables: replacing the plan's jit entry point with a bomb does not
+    detonate."""
+    eng = SpikeEngine(_net(), max_batch=8, telemetry=True, fuse_rounds=2)
+    times = eng.warmup()
+    assert set(eng._buckets) <= set(times["static"])
+    assert set(eng._plan._aot) == set(eng._buckets)
+
+    def bomb(*a, **k):
+        raise AssertionError("jit dispatch reached after warmup")
+
+    eng._plan._exec = bomb
+    reqs = _spike_reqs(13)
+    eng.serve(reqs)
+    assert all(r.status == "done" for r in reqs)
+    eng.close()
+
+
+def test_warmup_covers_event_grid_too():
+    """warmup(event_ts=...) AOT-compiles the (bucket, T) temporal grid; the
+    cached per-T plans then serve event streams without touching jit."""
+    eng = SpikeEngine(_net(), max_batch=8, telemetry=True)
+    eng.warmup(event_ts=(2, 3))
+
+    def bomb(*a, **k):
+        raise AssertionError("jit dispatch reached after warmup")
+
+    for t in (2, 3):
+        plan = eng._event_plan(t)
+        assert set(plan._aot) == set(eng._buckets), t
+        plan._exec = bomb
+    reqs = _event_reqs(5, t=2) + _event_reqs(4, t=3)
+    eng.serve(reqs)
+    assert all(r.status == "done" for r in reqs)
+    eng.close()
+
+
+def test_warmup_aot_false_falls_back_to_jit_warm():
+    """aot=False warms by executing (populating the jit cache) instead of
+    AOT-compiling — serve still works, nothing is pinned in _aot."""
+    eng = SpikeEngine(_net(), max_batch=8)
+    eng.warmup(aot=False)
+    assert not eng._plan._aot
+    reqs = _spike_reqs(3)
+    eng.serve(reqs)
+    assert all(r.status == "done" for r in reqs)
+    eng.close()
+
+
+def test_warmup_shares_stats_jit_with_serve():
+    """The telemetry warm and the drain loop hit the same module-level jitted
+    cost executable — warming it once covers every engine on the topology."""
+    net = _net()
+    eng = SpikeEngine(net, max_batch=8, telemetry=True)
+    eng.warmup()
+    fn = _stats_jit(net.topology, eng._effective_read_ports(), False)
+    assert fn is _stats_jit(net.topology, eng._effective_read_ports(), False)
+    eng.serve(_spike_reqs(3))
+    assert eng.stats()["n_requests"] == 3
+    eng.close()
+
+
+def test_warmup_times_are_reported():
+    eng = SpikeEngine(_net(), max_batch=8, telemetry=True)
+    times = eng.warmup()
+    assert times["total_s"] > 0.0
+    assert times["telemetry_s"] >= 0.0
+    for b in eng._buckets:
+        assert times["static"][b] >= 0.0
+    eng.close()
+
+
+# ----------------------------------------------------------------------- #
+# overlap machinery details
+# ----------------------------------------------------------------------- #
+def test_overlap_packer_thread_never_touches_jax():
+    """The background packer only runs numpy packing; every launch happens on
+    the caller thread (JAX dispatch is not thread-safe by contract here)."""
+    import threading
+
+    main = threading.get_ident()
+    seen = []
+    eng = SpikeEngine(_net(), interpret=True, max_batch=4, fuse_rounds=2,
+                      overlap=True)
+    orig = eng._launch_static
+
+    def spy(reqs, bucket, packed, pack_s):
+        seen.append(threading.get_ident())
+        orig(reqs, bucket, packed, pack_s)
+
+    eng._launch_static = spy
+    eng.serve(_spike_reqs(24))
+    assert seen and all(t == main for t in seen)
+    eng.close()
+
+
+def test_close_is_idempotent_and_shuts_down_packer():
+    eng = SpikeEngine(_net(), interpret=True, max_batch=4, overlap=True)
+    eng.serve(_spike_reqs(9))
+    assert eng._pool is not None
+    eng.close()
+    eng.close()
+    assert eng._pool is None
+
+
+def test_degradation_ladder_caps_fusion():
+    """A ladder level with fuse_cap throttles the super-batch so shed sweeps
+    stay frequent under pressure (economy caps at 2, survival at 1)."""
+    from repro.serve.overload import DegradationLadder
+
+    ladder = DegradationLadder.default(8)
+    names = [lv.name for lv in ladder.levels]
+    eng = SpikeEngine(_net(), interpret=True, max_batch=8, fuse_rounds=8,
+                      ladder=ladder, queue_limit=256)
+    assert eng._round_budget() == 8 * eng._round_limit()
+    eng._ladder_level = names.index("economy")       # fuse_cap=2
+    assert eng._round_budget() == 2 * eng._round_limit()
+    eng._ladder_level = names.index("survival")      # fuse_cap=1
+    assert eng._round_budget() == eng._round_limit()
+    eng.close()
+
+
+# ----------------------------------------------------------------------- #
+# dp super-batches on the 8-device host mesh (subprocess)
+# ----------------------------------------------------------------------- #
+_DP_FUSED_SCRIPT = r"""
+import warnings; warnings.simplefilter("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.esam.network import EsamNetwork
+from repro.distributed import sharding as shd
+from repro.serve.engine import SpikeEngine, SpikeRequest, EventRequest
+
+assert len(jax.devices()) == 8, jax.devices()
+key = jax.random.PRNGKey(0)
+topo = (256, 128, 10)
+bits = [jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                             (topo[i], topo[i+1])).astype(jnp.int8)
+        for i in range(len(topo)-1)]
+vth = [jnp.zeros((topo[i+1],), jnp.int32) for i in range(len(topo)-1)]
+net = EsamNetwork(weight_bits=bits, vth=vth,
+                  out_offset=jnp.zeros((topo[-1],), jnp.float32))
+rules = shd.make_esam_rules(shd.esam_data_mesh(8))
+
+def mk(seed):
+    r = np.random.default_rng(seed)
+    out = [SpikeRequest(spikes=(r.random(256) < 0.3).astype(np.uint8))
+           for _ in range(40)]
+    out += [EventRequest(events=(r.random((2, 256)) < 0.3).astype(np.uint8))
+            for _ in range(6)]
+    return out
+
+# ground truth: synchronous single-device drain
+sync = SpikeEngine(net, max_batch=16, telemetry=True)
+a = mk(7); sync.serve(a)
+
+# dp8 fused + overlapped + warmed drain must be bit-identical
+fused = SpikeEngine(net, max_batch=16, telemetry=True, rules=rules,
+                    fuse_rounds="auto", overlap=True)
+assert fused._fuse == 8
+fused.warmup(event_ts=(2,))
+b = mk(7); fused.serve(b)
+for x, y in zip(a, b):
+    np.testing.assert_array_equal(np.asarray(x.logits), np.asarray(y.logits))
+    assert x.label == y.label
+    for f in ("cycles", "latency_ns", "energy_pj"):
+        np.testing.assert_array_equal(np.asarray(getattr(x, f)),
+                                      np.asarray(getattr(y, f)), err_msg=f)
+st = fused.stats()
+assert st["data_parallel"] == 8
+assert st["rounds_saved"] > 0, st["rounds_saved"]
+assert st["fused_rounds"] >= 1
+fused.close(); sync.close()
+print("DP_FUSED_IDENTITY_OK")
+"""
+
+
+def test_dp_fused_super_batch_identity_on_host_mesh():
+    """dp8 fused super-batches are bit-identical to the single-device sync
+    drain (outputs + telemetry), and actually save dispatch rounds."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-c", _DP_FUSED_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "DP_FUSED_IDENTITY_OK" in proc.stdout
