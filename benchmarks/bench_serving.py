@@ -21,6 +21,9 @@ per configuration:
   * a chaos lane: two replicas behind the retrying ``FaultAwareRouter``
     with one crashed mid-drain and one slowed — completion accounting and
     retry counts,
+  * an observability-overhead lane: the same warmed drain with the tracing
+    + metrics plane on vs off (best-of-3 each side) — CI gates the
+    ``overhead_pct`` under the plane's 5% budget,
 
 into ``BENCH_serving.json`` (override with env BENCH_SERVING_OUT).  Run
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise
@@ -203,6 +206,46 @@ def _overload_lanes(rec: Recorder, net) -> None:
     )
 
 
+def _obs_overhead_lane(rec: Recorder, net) -> None:
+    """Tracer-on vs tracer-off drain cost: the observability plane's <5%
+    overhead budget as a measured lane (the CI serving-bench validation
+    gates ``overhead_pct`` against it).
+
+    Both sides serve the identical warmed closed-loop workload; best-of-3
+    medians each side so a CI noise spike on either doesn't fail the gate.
+    Tracing + metrics ride the full path (request spans, round/pack/
+    dispatch spans, histogram observes) into a fresh registry per repeat.
+    """
+    from repro.obs import Observability
+    from repro.obs.metrics import Registry
+
+    n = 256 if SMOKE else 1024
+    x, _ = digits.make_spike_dataset(n, seed=31)
+
+    def drain_s(obs) -> float:
+        eng = SpikeEngine(net, max_batch=MAX_BATCH, telemetry=True,
+                          fuse_rounds="auto", overlap=True,
+                          observability=obs)
+        eng.warmup()
+        reqs = [SpikeRequest(spikes=r) for r in x]
+        t0 = time.perf_counter()
+        eng.serve(reqs)
+        wall = time.perf_counter() - t0
+        eng.close()
+        return wall
+
+    off_s = min(drain_s(None) for _ in range(3))
+    on_s = min(drain_s(Observability.enabled(registry=Registry()))
+               for _ in range(3))
+    overhead_pct = 100.0 * (on_s - off_s) / off_s
+    rec.emit(
+        "serving_obs_overhead", on_s * 1e6 / n,
+        f"requests={n};tracer_off_ms={off_s * 1e3:.1f};"
+        f"tracer_on_ms={on_s * 1e3:.1f};"
+        f"overhead_pct={overhead_pct:.2f}%;gate=5%;repeats=3",
+    )
+
+
 def _cold_start_lane(rec: Recorder) -> None:
     """First-request latency, cold vs AOT-warmed.
 
@@ -261,6 +304,7 @@ def run():
                  "device_count=8 for the data-parallel lanes)")
 
     _cold_start_lane(rec)
+    _obs_overhead_lane(rec, net)
     _overload_lanes(rec, net)
 
     rec.write_json(os.environ.get("BENCH_SERVING_OUT", "BENCH_serving.json"))

@@ -50,6 +50,66 @@ from repro.models import lm, params as pm
 from repro.serve.engine import Engine, Request, SpikeEngine, SpikeRequest
 
 
+# ------------------------------------------------------------------ #
+# observability plane: --metrics-port / --trace-out / --profile-rounds
+# ------------------------------------------------------------------ #
+def _build_observability(args):
+    """Build the launcher's Observability handle (or None when every lane
+    is off) plus the scrape server when ``--metrics-port`` was given.
+
+    Returns ``(obs, metrics_server)``; the caller threads ``obs`` into the
+    engines and finishes with :func:`_finish_observability`."""
+    want_trace = args.trace_out is not None
+    want_metrics = args.metrics_port is not None or args.report_json
+    want_profile = args.profile_rounds > 0
+    if not (want_trace or want_metrics or want_profile):
+        return None, None
+    from repro.obs import DeviceProfiler, Observability, Registry, Tracer
+
+    registry = Registry() if (want_metrics or want_profile) else None
+    tracer = Tracer() if want_trace else None
+    profiler = None
+    if want_profile:
+        profiler = DeviceProfiler(
+            args.profile_dir, skip_rounds=args.profile_skip,
+            n_rounds=args.profile_rounds, registry=registry)
+    obs = Observability(tracer=tracer, metrics=registry, profile=profiler)
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs.http import MetricsServer
+
+        server = MetricsServer(registry, port=args.metrics_port,
+                               tracer=tracer)
+        port = server.start()
+        print(f"METRICS port={port} url=http://127.0.0.1:{port}/metrics")
+    return obs, server
+
+
+def _finish_observability(args, obs, server) -> None:
+    """Export the trace, print the greppable summary lines, then hold the
+    scrape endpoint open for ``--metrics-hold-s`` (CI curls it here)."""
+    if obs is None:
+        return
+    if obs.profile is not None:
+        obs.profile.stop()
+        status = obs.profile.error or "ok"
+        print(f"PROFILE dir={obs.profile.logdir} "
+              f"rounds={obs.profile.captured} status={status}")
+    if obs.tracer is not None and args.trace_out is not None:
+        from repro.obs.trace import validate_trace
+
+        doc = obs.tracer.export(args.trace_out)
+        summary = validate_trace(doc)
+        print(f"TRACE path={args.trace_out} events={summary['events']} "
+              f"requests={summary['request_begun']} "
+              f"close_fraction={summary['request_close_fraction']:.4f}")
+    if server is not None:
+        if args.metrics_hold_s > 0:
+            print(f"METRICS holding for {args.metrics_hold_s:.0f}s", flush=True)
+            time.sleep(args.metrics_hold_s)
+        server.stop()
+
+
 def _lm_main(args):
     cfg = cb.smoke(args.arch) if args.smoke else cb.get(args.arch)
     params = pm.init(lm.model_specs(cfg), jax.random.PRNGKey(args.seed))
@@ -84,7 +144,7 @@ def _random_esam_network(topology, seed: int):
         out_offset=jnp.zeros((topology[-1],), jnp.float32))
 
 
-def _esam_main(args):
+def _esam_main(args, obs=None):
     from repro.core.esam import cost_model as cm
     from repro.data import digits
     from repro.distributed import sharding as shd
@@ -104,7 +164,7 @@ def _esam_main(args):
 
     x, _ = digits.make_spike_dataset(n_requests, seed=args.seed)
     reqs = [SpikeRequest(spikes=x[i]) for i in range(n_requests)]
-    eng = SpikeEngine(net, **engine_kw)
+    eng = SpikeEngine(net, observability=obs, **engine_kw)
     if args.warmup:
         # AOT-compile the whole bucket ladder up front, then time the very
         # first request the warmed engine serves — the cold-start headline
@@ -146,7 +206,7 @@ def _esam_main(args):
     assert all(l is not None for l in labels)
 
 
-def _events_main(args):
+def _events_main(args, obs=None):
     """Synthetic event-stream traffic through the temporal plan: mixed-T
     rate-encoded digit streams drain via ``SpikeEngine.submit_events``
     ((batch, T)-bucketed rounds), printing spikes/s next to the modeled
@@ -178,7 +238,7 @@ def _events_main(args):
     # warm a throwaway engine on the same workload shape (plans are cached
     # per network) so the timed engine's stats() see only the timed requests
     SpikeEngine(net, **engine_kw).serve(make_requests())
-    eng = SpikeEngine(net, **engine_kw)
+    eng = SpikeEngine(net, observability=obs, **engine_kw)
     reqs = make_requests()
     t0 = time.perf_counter()
     eng.serve(reqs)
@@ -200,7 +260,7 @@ def _events_main(args):
     assert all(r.label is not None for r in reqs)
 
 
-def _traffic_main(args):
+def _traffic_main(args, obs=None):
     """Open-loop Poisson traffic (optionally chaos-injected) through the
     overload-hardened serving plane, printing the SLO-facing numbers."""
     from repro.core.esam import cost_model as cm
@@ -215,11 +275,14 @@ def _traffic_main(args):
     max_batch = 32 if args.batch_size is None else args.batch_size
     net = _random_esam_network(topology, args.seed)
 
-    def make_engine():
+    def make_engine(engine_obs=None):
+        # the warmup engine stays un-instrumented so the scrape/trace
+        # surfaces carry only the measured open-loop run
         return SpikeEngine(
             net, max_batch=max_batch, telemetry=True,
             read_ports=args.read_ports, queue_limit=4 * max_batch,
             fuse_rounds=_fuse_arg(args), overlap=not args.no_overlap,
+            observability=engine_obs,
             ladder=DegradationLadder.default(max_batch, args.read_ports))
 
     # closed-loop warmup on the same request blend: first pass compiles
@@ -236,13 +299,13 @@ def _traffic_main(args):
     rate_sust = len(timed) / (time.perf_counter() - t0)
     rate = args.rate if args.rate is not None else 2.0 * rate_sust
 
-    engines = [make_engine() for _ in range(max(1, args.replicas))]
+    engines = [make_engine(obs) for _ in range(max(1, args.replicas))]
     # health_threshold=0: a random network's measured telemetry deviates
     # from the reference calibration, so tile-health routing would mark
     # every replica degraded and starve all but one — this lane exercises
     # the overload plane (crash/retry/deadlines), not health scoring
     server = engines[0] if len(engines) == 1 else FaultAwareRouter(
-        engines, health_threshold=0.0,
+        engines, health_threshold=0.0, observability=obs,
         retry=RetryPolicy(base_backoff_s=1e-3, attempt_timeout_s=2.0))
     chaos = None
     if args.chaos:
@@ -260,7 +323,13 @@ def _traffic_main(args):
     if args.warmup:
         from repro.serve.traffic import warmup_engine
         warmup_engine(server, cfg)
-    rep = run_open_loop(server, cfg, slo_s=slo_s, chaos=chaos)
+    rep = run_open_loop(server, cfg, slo_s=slo_s, chaos=chaos,
+                        observability=obs)
+    if args.report_json:
+        import json
+        with open(args.report_json, "w") as f:
+            json.dump(rep.to_dict(), f, indent=2, default=str)
+        print(f"REPORT path={args.report_json}")
 
     print(f"esam-traffic: offered {rep.n_offered} requests @ {rate:,.0f}/s "
           f"(sustainable ~{rate_sust:,.0f}/s, replicas={len(engines)}, "
@@ -343,20 +412,44 @@ def main():
                     help="enable the persistent JAX compilation cache "
                          "(optional directory; default "
                          "~/.cache/repro-jax-compilation)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus /metrics on this port "
+                         "(0 = ephemeral; prints 'METRICS port=...')")
+    ap.add_argument("--metrics-hold-s", type=float, default=0.0,
+                    help="keep the /metrics endpoint up this long after the "
+                         "run finishes (lets CI scrape before exit)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Perfetto trace_event JSON of the run "
+                         "(open at ui.perfetto.dev)")
+    ap.add_argument("--profile-rounds", type=int, default=0, metavar="N",
+                    help="capture a jax.profiler trace around N drain "
+                         "rounds (see --profile-dir/--profile-skip)")
+    ap.add_argument("--profile-dir", default="/tmp/esam-profile",
+                    help="logdir for the jax.profiler capture")
+    ap.add_argument("--profile-skip", type=int, default=1,
+                    help="drain rounds to skip before the profiler arms "
+                         "(skips cold-start compiles; default 1)")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="--traffic: write the TrafficReport (with the "
+                         "metrics snapshot) as JSON")
     args = ap.parse_args()
     from repro.launch import env as env_mod
     if args.host_devices is not None:
         env_mod.apply_host_devices(args.host_devices)
     if args.compile_cache is not None:
         env_mod.enable_compilation_cache(args.compile_cache or None)
-    if args.traffic:
-        _traffic_main(args)
-    elif args.events:
-        _events_main(args)
-    elif args.esam:
-        _esam_main(args)
-    else:
-        _lm_main(args)
+    obs, metrics_server = _build_observability(args)
+    try:
+        if args.traffic:
+            _traffic_main(args, obs)
+        elif args.events:
+            _events_main(args, obs)
+        elif args.esam:
+            _esam_main(args, obs)
+        else:
+            _lm_main(args)
+    finally:
+        _finish_observability(args, obs, metrics_server)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,134 @@
+"""Device profiling hooks: ``jax.profiler`` capture + compile-time lanes.
+
+Three profiling surfaces for the serving stack:
+
+  * :class:`DeviceProfiler` — arms ``jax.profiler`` trace capture around a
+    window of serving drain rounds (skip the first ``skip_rounds``, capture
+    ``n_rounds``).  The engine calls ``on_round_start``/``on_round_end`` per
+    dispatch round; the profiler starts/stops exactly once, never raises
+    into the drain (a failed backend capture is recorded in ``error``
+    instead — profiling must not take down serving), and books the captured
+    window into the metrics registry.  The resulting logdir opens in
+    TensorBoard/Perfetto next to the host-side ``Tracer`` export.
+  * :func:`record_warmup_times` — folds ``SpikeEngine.warmup()`` /
+    ``EsamPlan.warmup()`` per-shape compile seconds into registry gauges
+    (``esam_warmup_compile_seconds{shape=...}``), so AOT warmup and
+    persistent-cache behavior are visible on the scrape endpoint rather
+    than only in a returned dict.
+  * :func:`kernel_timer` — a per-kernel timing lane: a context manager that
+    observes one kernel call's wall time into a labeled histogram
+    (``esam_kernel_seconds{kernel=...,lane=...}``).  ``bench_kernels`` runs
+    the popcount mega-kernel and the packed cascade through it so per-kernel
+    quantiles ride in the same registry as the serving metrics.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Optional
+
+from repro.obs.metrics import Registry
+
+
+class DeviceProfiler:
+    """Capture a ``jax.profiler`` trace around N serving drain rounds."""
+
+    def __init__(self, logdir: str, *, skip_rounds: int = 0,
+                 n_rounds: int = 1, registry: Optional[Registry] = None,
+                 profiler=None):
+        assert n_rounds >= 1, n_rounds
+        self.logdir = logdir
+        self.skip_rounds = int(skip_rounds)
+        self.n_rounds = int(n_rounds)
+        self.registry = registry
+        self._profiler = profiler      # injectable for tests; None => jax's
+        self.active = False
+        self.done = False
+        self.captured = 0
+        self.error: Optional[str] = None
+        self._seen = 0
+
+    def _jax_profiler(self):
+        if self._profiler is None:
+            import jax
+            self._profiler = jax.profiler
+        return self._profiler
+
+    def on_round_start(self, round_idx: int) -> None:
+        """Called by the engine before each dispatch round."""
+        if self.done or self.active:
+            return
+        if self._seen < self.skip_rounds:
+            self._seen += 1
+            return
+        try:
+            self._jax_profiler().start_trace(self.logdir)
+            self.active = True
+        except Exception as e:  # noqa: BLE001 — profiling never kills serving
+            self.error = f"{type(e).__name__}: {e}"
+            self.done = True
+
+    def on_round_end(self, round_idx: int) -> None:
+        """Called by the engine after each dispatch round."""
+        if not self.active:
+            return
+        self.captured += 1
+        if self.captured >= self.n_rounds:
+            self.stop()
+
+    def stop(self) -> None:
+        """Stop an in-flight capture (idempotent; also the abort path)."""
+        if self.active:
+            try:
+                self._jax_profiler().stop_trace()
+            except Exception as e:  # noqa: BLE001
+                self.error = f"{type(e).__name__}: {e}"
+            self.active = False
+        self.done = True
+        if self.registry is not None:
+            self.registry.gauge(
+                "esam_profile_rounds_captured",
+                "drain rounds inside the jax.profiler capture window",
+            ).set(self.captured)
+
+
+def record_warmup_times(registry: Registry, times: dict,
+                        prefix: str = "static") -> None:
+    """Fold a ``warmup()`` result dict into per-shape compile-time gauges.
+
+    Accepts both shapes the repo produces: ``EsamPlan.warmup`` returns
+    ``{batch: seconds}``; ``SpikeEngine.warmup`` returns
+    ``{"static": {batch: s}, "event_t4": {batch: s}, ..., "telemetry_s": s,
+    "total_s": s}`` — nesting is flattened into the ``shape`` label.
+    """
+    for key, val in times.items():
+        if isinstance(val, dict):
+            record_warmup_times(registry, val, prefix=str(key))
+            continue
+        shape = (f"{prefix}_b{key}" if isinstance(key, int)
+                 else (str(key) if prefix == "static" else f"{prefix}_{key}"))
+        registry.gauge(
+            "esam_warmup_compile_seconds",
+            "AOT warmup compile seconds per plan shape",
+            shape=shape,
+        ).set(float(val))
+
+
+@contextlib.contextmanager
+def kernel_timer(registry: Registry, kernel: str, *, lane: str = "default",
+                 clock=time.perf_counter):
+    """Time one kernel call into ``esam_kernel_seconds{kernel=,lane=}``.
+
+    The caller is responsible for making the timed section synchronous
+    (``jax.block_until_ready`` inside the body) — this lane measures wall
+    time, like every bench in the repo.
+    """
+    hist = registry.histogram(
+        "esam_kernel_seconds", "per-kernel wall time", kernel=kernel,
+        lane=lane)
+    t0 = clock()
+    try:
+        yield hist
+    finally:
+        hist.observe(clock() - t0)

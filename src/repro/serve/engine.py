@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.distributed import sharding as shd
 from repro.models import lm
+from repro.obs import Observability
 from repro.serve.overload import AdmissionVerdict, DegradationLadder
 from repro.train import fault_tolerance as ft
 
@@ -183,6 +184,99 @@ def _stats_jit(topology: tuple, read_ports: int, temporal: bool):
     return jax.jit(lambda loads: fn(topology, loads, read_ports))
 
 
+# ------------------------------------------------------------------ #
+# stats() schema: documented, versioned, grouped into typed sections.
+# CI (PR 7-9) greps several of these keys out of bench derived strings —
+# tests/test_obs.py pins the schema so a rename can never silently break
+# those gates.  Bump STATS_SCHEMA_VERSION on any key change.
+# ------------------------------------------------------------------ #
+STATS_SCHEMA_VERSION = 1
+
+_STATS_SCHEMA: dict[str, dict[str, str]] = {
+    # engine identity + configuration
+    "identity": {
+        "stats_schema_version": "int",
+        "requests": "int",              # legacy alias of n_requests
+        "n_requests": "int",
+        "telemetry": "bool",
+        "cell": "str",
+        "read_ports": "int",
+        "data_parallel": "int",
+    },
+    # fault-aware serving: tile health + dispatch watchdog
+    "health": {
+        "faulted": "bool",
+        "tile_health": "list",
+        "health": "float",
+        "degraded": "bool",
+        "dispatch_rounds": "int",
+        "straggler_rounds": "int",
+    },
+    # overload plane: admission, deadlines, degradation ladder
+    "overload": {
+        "queue_depth": "int",
+        "queue_limit": "int|None",
+        "high_water": "int|None",
+        "shed_deadline": "int",
+        "rejected_full": "int",
+        "backpressure_events": "int",
+        "degradation_level": "int",
+        "degradation_level_name": "str",
+        "ladder_transitions": "int",
+        "ladder_transition_log": "list",
+    },
+    # per-round host-sync/dispatch observability (dp8 attribution numbers)
+    "rounds": {
+        "rounds_static": "int",
+        "rounds_event": "int",
+        "rows_real_total": "int",
+        "rows_padded_total": "int",
+        "pad_fraction": "float",
+        "rounds_per_bucket": "dict",
+        "padded_rows_per_bucket": "dict",
+        "real_rows_per_bucket": "dict",
+        "pad_fraction_per_bucket": "dict",
+        "host_pack_s_total": "float",
+        "dispatch_s_total": "float",
+    },
+    # fused async dispatch (the dp-scaling fix)
+    "fusion": {
+        "fuse_rounds": "int",
+        "overlap": "bool",
+        "fused_rounds": "int",
+        "rounds_saved": "int",
+    },
+    # event-stream (temporal plane) aggregates
+    "events": {
+        "n_event_requests": "int",
+        "timesteps_total": "int",
+        "event_energy_pj_mean": "float",
+        "event_latency_ns_mean": "float",
+        "event_cycles_mean": "float",
+        "energy_pj_per_timestep": "float",
+    },
+    # paper-unit hardware cost aggregates (zero-filled before any traffic)
+    "cost": {
+        "cycles_mean": "float",
+        "latency_ns_mean": "float",
+        "energy_pj_per_inf": "float",
+        "throughput_inf_s": "float",
+        "throughput_pipelined_inf_s": "float",
+    },
+}
+
+
+def stats_schema() -> dict[str, dict[str, str]]:
+    """The versioned schema of ``SpikeEngine.stats()``: section -> key ->
+    type name (``"int|None"`` marks optionally-unset config knobs).
+
+    The returned dict is a fresh copy — mutate freely.  ``stats()`` always
+    returns exactly the union of these keys (regression-tested), and
+    ``stats()["stats_schema_version"] == STATS_SCHEMA_VERSION``.
+    """
+    return {section: dict(keys) for section, keys in _STATS_SCHEMA.items()}
+
+
 def _bucket_sizes(max_batch: int, min_bucket: int, dp: int) -> list[int]:
     """Power-of-two bucket ladder: min_bucket, 2*min_bucket, ... >= max_batch.
 
@@ -259,6 +353,7 @@ class SpikeEngine:
                  ladder: Optional[DegradationLadder] = None,
                  clock=time.monotonic,
                  round_hook=None,
+                 observability: Optional[Observability] = None,
                  batch_size: Optional[int] = None):
         from repro.core import packing
         from repro.core.esam import cost_model as cm
@@ -303,6 +398,18 @@ class SpikeEngine:
         # dispatch round (inside the watchdog-timed section) — a raising hook
         # models a replica crashing mid-drain
         self.round_hook = round_hook
+        # ---- observability plane (repro.obs) --------------------------- #
+        # All three lanes default off; every emission below is guarded so
+        # the off path stays bit-identical to the instrumented path (spans
+        # observe, never perturb — property-tested in test_obs_identity).
+        self._obs = observability
+        self._tracer = observability.tracer if observability else None
+        self._metrics = observability.metrics if observability else None
+        self._profiler = observability.profile if observability else None
+        # id(request) -> (async span id, admit ts us); entries are removed
+        # at every terminal transition, so the map never outgrows the queue
+        self._req_spans: dict[int, tuple[int, float]] = {}
+        self._m = self._make_instruments(self._metrics)
         # overload counters (all surfaced through stats())
         self._shed_deadline = 0
         self._rejected_full = 0
@@ -378,6 +485,105 @@ class SpikeEngine:
         }
 
     # -------------------------------------------------------------- #
+    # observability plane: instruments + span helpers (all no-ops when off)
+    # -------------------------------------------------------------- #
+    @staticmethod
+    def _make_instruments(reg) -> Optional[dict]:
+        """Pre-register every engine metric so the scrape endpoint shows the
+        full (zeroed) surface before the first request.  Counter totals are
+        incremented with exactly the values ``stats()`` folds, so the two
+        always reconcile (tested)."""
+        if reg is None:
+            return None
+        c, g, h = reg.counter, reg.gauge, reg.histogram
+        return {
+            "submitted": c("esam_requests_submitted_total",
+                           "requests admitted to the engine queue"),
+            "rejected": c("esam_requests_rejected_total",
+                          "bounded-queue admission rejections"),
+            "shed": c("esam_requests_shed_total",
+                      "requests shed on an expired deadline"),
+            "served_static": c("esam_requests_served_total",
+                               "requests served", kind="static"),
+            "served_event": c("esam_requests_served_total",
+                              "requests served", kind="event"),
+            "timesteps": c("esam_timesteps_served_total",
+                           "event-stream timesteps served"),
+            "rounds": c("esam_dispatch_rounds_total",
+                        "continuous-batching dispatch rounds"),
+            "fused": c("esam_fused_rounds_total",
+                       "rounds that coalesced >1 legacy bucket-round"),
+            "rounds_saved": c("esam_rounds_saved_total",
+                              "legacy bucket-rounds saved by fusion"),
+            "rows_real": c("esam_rows_real_total",
+                           "real (non-padded) rows dispatched"),
+            "rows_padded": c("esam_rows_padded_total",
+                             "zero-padded bucket rows dispatched"),
+            "backpressure": c("esam_backpressure_events_total",
+                              "admissions past the high-water mark"),
+            "ladder_transitions": c("esam_ladder_transitions_total",
+                                    "degradation-ladder level changes"),
+            "energy": c("esam_energy_pj_total",
+                        "modeled inference energy (pJ), telemetry lane"),
+            "cycles": c("esam_cycles_total",
+                        "modeled CIM cycles, telemetry lane"),
+            "queue_depth": g("esam_queue_depth",
+                             "requests admitted and awaiting dispatch"),
+            "ladder_level": g("esam_degradation_level",
+                              "current degradation-ladder level (0=full)"),
+            "health": g("esam_health",
+                        "weakest-tile health score in [0,1]"),
+            "pack_s": h("esam_round_pack_seconds",
+                        "host-side wire-format packing time per round"),
+            "dispatch_s": h("esam_round_dispatch_seconds",
+                            "plan dispatch-call time per round"),
+            "queue_s": h("esam_request_queue_seconds",
+                         "admit -> round-formation queue wait"),
+            "latency_s": h("esam_request_latency_seconds",
+                           "admit -> terminal-state request latency"),
+        }
+
+    def _dp_degree(self) -> int:
+        return 1 if self.rules is None else self.rules.axis_size("spike_batch")
+
+    def _obs_admit(self, r) -> None:
+        """Open the request's async span + book the admission."""
+        if self._m is not None:
+            self._m["submitted"].inc()
+            self._m["queue_depth"].set(self.queue_depth())
+        if self._tracer is not None:
+            rid = self._tracer.next_id()
+            self._req_spans[id(r)] = (rid, self._tracer.now_us())
+            self._tracer.begin_async(
+                "request", rid,
+                kind="event" if isinstance(r, EventRequest) else "static",
+                deadline_s=r.deadline_s, dp=self._dp_degree())
+
+    def _obs_close(self, r, status: str, **args) -> None:
+        """Close the request's async span at a terminal transition."""
+        entry = self._req_spans.pop(id(r), None)
+        if entry is None:
+            return
+        rid, t_admit = entry
+        now = self._tracer.now_us()
+        if self._m is not None:
+            self._m["latency_s"].observe((now - t_admit) / 1e6)
+        self._tracer.end_async("request", rid, status=status, **args)
+
+    def _obs_queue_spans(self, reqs, bucket: int) -> None:
+        """Per-request queue-wait spans: admit time -> round formation."""
+        now = self._tracer.now_us()
+        for r in reqs:
+            entry = self._req_spans.get(id(r))
+            if entry is None:
+                continue
+            rid, t_admit = entry
+            self._tracer.complete("queue", t_admit, now - t_admit,
+                                  cat="request", req=rid, bucket=bucket)
+            if self._m is not None:
+                self._m["queue_s"].observe((now - t_admit) / 1e6)
+
+    # -------------------------------------------------------------- #
     # admission + dispatch
     # -------------------------------------------------------------- #
     def queue_depth(self) -> int:
@@ -406,6 +612,10 @@ class SpikeEngine:
             if self._queue_limit is not None and depth >= self._queue_limit:
                 r.status = "rejected"
                 self._rejected_full += 1
+                if self._m is not None:
+                    self._m["rejected"].inc()
+                if self._tracer is not None:
+                    self._tracer.instant("rejected", queue_depth=depth)
                 verdicts.append(AdmissionVerdict(
                     admitted=False, reason="queue_full", queue_depth=depth))
                 continue
@@ -413,10 +623,14 @@ class SpikeEngine:
                 self._pending_events.append(r)
             else:
                 self._pending.append(r)
+            if self._obs is not None:
+                self._obs_admit(r)
             depth += 1
             bp = self._high_water is not None and depth > self._high_water
             if bp:
                 self._backpressure_events += 1
+                if self._m is not None:
+                    self._m["backpressure"].inc()
             verdicts.append(AdmissionVerdict(
                 admitted=True, backpressure=bp, queue_depth=depth))
         return verdicts[0] if single else verdicts
@@ -604,6 +818,13 @@ class SpikeEngine:
                         _stats_jit(topo, ports, True)(resT.loads))
             times["telemetry_s"] = time.perf_counter() - tw0
         times["total_s"] = time.perf_counter() - t0
+        if self._metrics is not None:
+            from repro.obs.profile import record_warmup_times
+            record_warmup_times(self._metrics, times)
+        if self._tracer is not None:
+            self._tracer.instant("warmup_done", cat="engine",
+                                 total_s=times["total_s"],
+                                 shapes=len(self._buckets) + len(ts))
         return times
 
     # -------------------------------------------------------------- #
@@ -627,6 +848,11 @@ class SpikeEngine:
                 if r.deadline_s is not None and now > r.deadline_s:
                     r.status = "shed"
                     self._shed_deadline += 1
+                    if self._m is not None:
+                        self._m["shed"].inc()
+                    if self._tracer is not None:
+                        self._tracer.instant("shed", deadline_s=r.deadline_s)
+                        self._obs_close(r, "shed")
                 else:
                     keep.append(r)
             setattr(self, name, keep)
@@ -704,6 +930,14 @@ class SpikeEngine:
             "to": self._ladder.level(to_level).name,
             "reason": reason,
         })
+        if self._m is not None:
+            self._m["ladder_transitions"].inc()
+            self._m["ladder_level"].set(to_level)
+        if self._tracer is not None:
+            self._tracer.instant(
+                "ladder_transition", cat="ladder", round=self._rounds,
+                from_level=self._ladder_level, to_level=to_level,
+                reason=reason)
         self._ladder_level = to_level
 
     def _timed_round(self, dispatch, *args) -> None:
@@ -716,9 +950,23 @@ class SpikeEngine:
         requests are popped but never served, which is what the router's
         retry path recovers)."""
         t0 = time.perf_counter()
+        if self._profiler is not None:
+            self._profiler.on_round_start(self._rounds)
+        trace_t0 = (self._tracer.now_us() if self._tracer is not None
+                    else 0.0)
         if self.round_hook is not None:
             self.round_hook(self._rounds)
         dispatch(*args)
+        if self._tracer is not None:
+            self._tracer.complete(
+                "round", trace_t0, self._tracer.now_us() - trace_t0,
+                cat="round", round=self._rounds, level=self._level().name,
+                dp=self._dp_degree())
+        if self._profiler is not None:
+            self._profiler.on_round_end(self._rounds)
+        if self._m is not None:
+            self._m["rounds"].inc()
+            self._m["queue_depth"].set(self.queue_depth())
         self._watchdog.record(self._rounds, time.perf_counter() - t0)
         self._rounds += 1
 
@@ -744,6 +992,15 @@ class SpikeEngine:
         if n_legacy > 1:
             c["fused_rounds"] += 1
             c["rounds_saved"] += n_legacy - 1
+        if self._m is not None:
+            self._m[f"served_{kind}"].inc(n_real)
+            self._m["rows_real"].inc(n_real)
+            self._m["rows_padded"].inc(bucket - n_real)
+            self._m["pack_s"].observe(pack_s)
+            self._m["dispatch_s"].observe(dispatch_s)
+            if n_legacy > 1:
+                self._m["fused"].inc()
+                self._m["rounds_saved"].inc(n_legacy - 1)
         self._rounds_per_bucket[bucket] = (
             self._rounds_per_bucket.get(bucket, 0) + 1)
         self._padded_rows_per_bucket[bucket] = (
@@ -759,10 +1016,16 @@ class SpikeEngine:
                      bucket: int) -> tuple[np.ndarray, float]:
         """Host half of a static round: bit-pack to the padded wire format
         (pure numpy — safe on the packer thread)."""
+        trace_t0 = self._tracer.now_us() if self._tracer is not None else 0.0
         t0 = time.perf_counter()
         packed = self._packing.pack_padded_rows_np(
             [r.spikes for r in reqs], bucket, self.n_in)
-        return packed, time.perf_counter() - t0
+        pack_s = time.perf_counter() - t0
+        if self._tracer is not None:
+            self._tracer.complete(
+                "pack", trace_t0, self._tracer.now_us() - trace_t0,
+                cat="round", kind="static", bucket=bucket, n_real=len(reqs))
+        return packed, pack_s
 
     def _launch_static(self, reqs: list[SpikeRequest], bucket: int,
                        packed: np.ndarray, pack_s: float) -> None:
@@ -770,6 +1033,9 @@ class SpikeEngine:
         host sync here).  Pack time and dispatch-call time are recorded
         separately per bucket — the observability that attributed the dp8
         regression to host sync + tiny per-bucket dispatches."""
+        if self._tracer is not None:
+            self._obs_queue_spans(reqs, bucket)
+        trace_t1 = self._tracer.now_us() if self._tracer is not None else 0.0
         t1 = time.perf_counter()
         res = self._plan(jnp.asarray(packed))
         rs = None
@@ -778,6 +1044,15 @@ class SpikeEngine:
             rs = _stats_jit(self.net.topology, self._effective_read_ports(),
                             False)(res.loads)
         t2 = time.perf_counter()
+        if self._tracer is not None:
+            n_legacy = self._n_legacy(len(reqs))
+            if n_legacy > 1:
+                self._tracer.instant("fuse", cat="round", bucket=bucket,
+                                     rounds_coalesced=n_legacy)
+            self._tracer.complete(
+                "dispatch", trace_t1, self._tracer.now_us() - trace_t1,
+                cat="round", kind="static", bucket=bucket, n_real=len(reqs),
+                dp=self._dp_degree())
         self._note_round("static", bucket, len(reqs), pack_s, t2 - t1,
                          self._n_legacy(len(reqs)))
         self._served += len(reqs)
@@ -803,6 +1078,7 @@ class SpikeEngine:
                      bucket: int) -> tuple[np.ndarray, float]:
         """Host half of an event round (pure numpy — packer-thread safe)."""
         width = self._packing.packed_width(self.n_in)
+        trace_t0 = self._tracer.now_us() if self._tracer is not None else 0.0
         t0 = time.perf_counter()
         packed = np.zeros((n_steps, bucket, width), np.uint32)
         for i, ev in enumerate(events):
@@ -813,11 +1089,20 @@ class SpikeEngine:
                 assert ev.shape[1:] == (self.n_in,), (ev.shape, self.n_in)
                 packed[:, i] = self._packing.pack_spikes_np(
                     ev[:n_steps] != 0)
-        return packed, time.perf_counter() - t0
+        pack_s = time.perf_counter() - t0
+        if self._tracer is not None:
+            self._tracer.complete(
+                "pack", trace_t0, self._tracer.now_us() - trace_t0,
+                cat="round", kind="event", bucket=bucket, t=n_steps,
+                n_real=len(events))
+        return packed, pack_s
 
     def _launch_events(self, reqs: list[EventRequest], bucket: int,
                        n_steps: int, packed: np.ndarray,
                        pack_s: float) -> None:
+        if self._tracer is not None:
+            self._obs_queue_spans(reqs, bucket)
+        trace_t1 = self._tracer.now_us() if self._tracer is not None else 0.0
         t1 = time.perf_counter()
         res = self._event_plan(n_steps)(jnp.asarray(packed))
         rs = None
@@ -825,10 +1110,21 @@ class SpikeEngine:
             rs = _stats_jit(self.net.topology, self._effective_read_ports(),
                             True)(res.loads)
         t2 = time.perf_counter()
+        if self._tracer is not None:
+            n_legacy = self._n_legacy(len(reqs))
+            if n_legacy > 1:
+                self._tracer.instant("fuse", cat="round", bucket=bucket,
+                                     rounds_coalesced=n_legacy)
+            self._tracer.complete(
+                "dispatch", trace_t1, self._tracer.now_us() - trace_t1,
+                cat="round", kind="event", bucket=bucket, t=n_steps,
+                n_real=len(reqs), dp=self._dp_degree())
         self._note_round("event", bucket, len(reqs), pack_s, t2 - t1,
                          self._n_legacy(len(reqs)))
         self._served_events += len(reqs)
         self._served_timesteps += len(reqs) * n_steps
+        if self._m is not None:
+            self._m["timesteps"].inc(len(reqs) * n_steps)
         self._inflight.append((reqs, res.logits, rs))
 
     def _dispatch_events(self, reqs: list[EventRequest], n_steps: int) -> None:
@@ -854,7 +1150,15 @@ class SpikeEngine:
         for reqs, logits_j, rs in self._inflight:
             n = len(reqs)
             is_event = bool(reqs) and isinstance(reqs[0], EventRequest)
+            trace_t0 = (self._tracer.now_us() if self._tracer is not None
+                        else 0.0)
             logits = np.asarray(logits_j)
+            if self._tracer is not None:
+                self._tracer.complete(
+                    "device_drain", trace_t0,
+                    self._tracer.now_us() - trace_t0, cat="flush",
+                    kind="event" if is_event else "static", n_real=n)
+                trace_t0 = self._tracer.now_us()
             for i, r in enumerate(reqs):
                 r.logits = logits[i]
                 r.label = int(logits[i].argmax())
@@ -878,10 +1182,26 @@ class SpikeEngine:
                     self._totals["cycles_per_tile"] += np.asarray(
                         rs["cycles_per_tile"], np.float64)[:n].sum(axis=0)
                     tot = self._totals
-                tot["cycles"] += float(cycles[:n].sum(dtype=np.float64))
+                cycles_sum = float(cycles[:n].sum(dtype=np.float64))
+                energy_sum = float(energy[:n].sum(dtype=np.float64))
+                tot["cycles"] += cycles_sum
                 tot["latency_ns"] += float(latency[:n].sum(dtype=np.float64))
-                tot["energy_pj"] += float(energy[:n].sum(dtype=np.float64))
+                tot["energy_pj"] += energy_sum
+                if self._m is not None:
+                    self._m["cycles"].inc(cycles_sum)
+                    self._m["energy"].inc(energy_sum)
+            if self._tracer is not None:
+                self._tracer.complete(
+                    "telemetry_flush", trace_t0,
+                    self._tracer.now_us() - trace_t0, cat="flush",
+                    kind="event" if is_event else "static", n_real=n,
+                    telemetry=rs is not None)
+            if self._obs is not None:
+                for r in reqs:
+                    self._obs_close(r, "done", label=r.label)
         self._inflight.clear()
+        if self._m is not None and self.telemetry and self._served:
+            self._m["health"].set(self.health())
 
     # -------------------------------------------------------------- #
     # fault-aware serving: tile health + degraded-mesh replan
@@ -921,6 +1241,9 @@ class SpikeEngine:
         totals survive (same network, same tiles).
         """
         self._flush()
+        if self._tracer is not None:
+            self._tracer.instant("replan_degraded", cat="engine",
+                                 n_devices=int(n_devices))
         plan = ft.elastic_replan(max(1, int(n_devices)), model_parallel=1)
         (data, _), _ = plan
         self.rules = (shd.make_esam_rules(shd.esam_data_mesh(data))
@@ -964,6 +1287,7 @@ class SpikeEngine:
         ne, nt = self._served_events, self._served_timesteps
         et = self._event_totals
         base = {
+            "stats_schema_version": STATS_SCHEMA_VERSION,
             "requests": n,          # legacy key
             "n_requests": n,
             "telemetry": self.telemetry,
@@ -1081,6 +1405,7 @@ class FaultAwareRouter:
     def __init__(self, engines, *, health_threshold: float = 0.75,
                  retry: Optional[ft.RetryPolicy] = None,
                  on_all_degraded: str = "fallback",
+                 observability: Optional[Observability] = None,
                  sleep=time.sleep, clock=time.monotonic):
         assert engines, "router needs at least one engine"
         assert on_all_degraded in ("fallback", "raise"), on_all_degraded
@@ -1099,6 +1424,26 @@ class FaultAwareRouter:
         self._backoff_counter = 0
         self._sleep = sleep
         self._clock = clock
+        self._obs = observability
+        self._tracer = observability.tracer if observability else None
+        self._metrics = observability.metrics if observability else None
+
+    def _count(self, name: str, n: int = 1) -> None:
+        """Bump a router counter, mirrored into ``esam_router_*_total``."""
+        self.counters[name] += n
+        if self._metrics is not None:
+            self._metrics.counter(
+                f"esam_router_{name}_total",
+                "fault-aware router event counter").inc(n)
+
+    def _health_gauges(self) -> None:
+        if self._metrics is not None:
+            self._metrics.gauge(
+                "esam_router_replicas_down",
+                "replicas out of rotation (crashed)").set(len(self._down))
+            self._metrics.gauge(
+                "esam_router_replicas_slow",
+                "replicas flagged slow (drain timeout)").set(len(self._slow))
 
     def backlog(self) -> int:
         """Routed requests not yet completed on a live replica."""
@@ -1129,7 +1474,11 @@ class FaultAwareRouter:
         else:
             # every live candidate is degraded: no silent routing onto
             # known-bad silicon — count it, and raise if so configured
-            self.counters["degraded_route"] += 1
+            self._count("degraded_route")
+            if self._tracer is not None:
+                self._tracer.instant("degraded_route", cat="router",
+                                     scores={i: float(s)
+                                             for i, s in scores.items()})
             if self.on_all_degraded == "raise":
                 raise AllReplicasDegradedError(
                     f"all live replicas below health threshold "
@@ -1142,11 +1491,11 @@ class FaultAwareRouter:
                 if pool and idx not in pool:
                     # healthy queues were all full and the request spilled
                     # onto a degraded replica — visible, not silent
-                    self.counters["degraded_route"] += 1
+                    self._count("degraded_route")
                 self._assigned[idx].append(request)
                 self.routed[idx] += 1
                 return idx
-        self.counters["rejected_full"] += 1
+        self._count("rejected_full")
         return None
 
     def serve(self, requests=None) -> list:
@@ -1174,6 +1523,8 @@ class FaultAwareRouter:
                     continue
                 if not (self._assigned[idx] or eng.queue_depth()):
                     continue
+                trace_t0 = (self._tracer.now_us()
+                            if self._tracer is not None else 0.0)
                 t0 = self._clock()
                 try:
                     eng.serve()
@@ -1181,10 +1532,20 @@ class FaultAwareRouter:
                     self._on_crash(idx)
                     continue
                 dt = self._clock() - t0
+                if self._tracer is not None:
+                    self._tracer.complete(
+                        "replica_drain", trace_t0,
+                        self._tracer.now_us() - trace_t0, cat="router",
+                        replica=idx, drain_s=dt)
                 to = self.retry.attempt_timeout_s
                 if to is not None and dt > to:
-                    self.counters["timeouts"] += 1
+                    self._count("timeouts")
                     self._slow.add(idx)
+                    if self._tracer is not None:
+                        self._tracer.instant("replica_slow", cat="router",
+                                             replica=idx, drain_s=dt,
+                                             timeout_s=to)
+                    self._health_gauges()
                 self._assigned[idx] = [
                     r for r in self._assigned[idx]
                     if r.logits is None and r.status == "pending"]
@@ -1196,10 +1557,14 @@ class FaultAwareRouter:
         requests with exponential backoff + seeded jitter.  Requests it
         already completed keep their results (exactly-once: results attach
         on exactly one replica; lost in-flight work is re-served)."""
-        self.counters["crashes"] += 1
+        self._count("crashes")
         self._down.add(idx)
+        self._health_gauges()
         victims = [r for r in self._assigned[idx]
                    if r.logits is None and r.status == "pending"]
+        if self._tracer is not None:
+            self._tracer.instant("replica_crash", cat="router", replica=idx,
+                                 victims=len(victims))
         self._assigned[idx] = []
         # empty the dead replica's queues: its pending requests are exactly
         # the victims being re-routed, and leaving them behind would both
@@ -1213,7 +1578,7 @@ class FaultAwareRouter:
             r.attempts += 1
             if r.attempts >= self.retry.max_attempts:
                 r.status = "failed"
-                self.counters["failed"] += 1
+                self._count("failed")
                 continue
             self._backoff_counter += 1
             self._sleep(self.retry.backoff_s(r.attempts,
@@ -1222,10 +1587,14 @@ class FaultAwareRouter:
                 dest = self.route(r, exclude={idx})
             except AllReplicasDownError:
                 r.status = "failed"
-                self.counters["failed"] += 1
+                self._count("failed")
                 continue
             if dest is not None:
-                self.counters["retries"] += 1
+                self._count("retries")
+                if self._tracer is not None:
+                    self._tracer.instant("reroute", cat="router",
+                                         from_replica=idx, to_replica=dest,
+                                         attempt=r.attempts)
 
     def stats(self) -> dict:
         per_engine = [

@@ -183,6 +183,9 @@ class TrafficReport:
     backpressure_events: int = 0
     ladder_transitions: int = 0
     max_degradation_level: int = 0
+    #: metrics-registry snapshot (``Registry.snapshot()``) when the run was
+    #: driven with an observability handle; None otherwise
+    metrics: Optional[dict] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -199,6 +202,7 @@ def _percentiles_ms(lat_s: np.ndarray):
 def run_open_loop(server, cfg: TrafficConfig, *,
                   slo_s: Optional[float] = None,
                   chaos: Optional[ChaosConfig] = None,
+                  observability=None,
                   clock=time.monotonic, sleep=time.sleep,
                   max_wall_s: float = 120.0) -> TrafficReport:
     """Drive ``server`` (a ``SpikeEngine`` or ``FaultAwareRouter``) with the
@@ -209,6 +213,12 @@ def run_open_loop(server, cfg: TrafficConfig, *,
     delay counts against the SLO, as it does for a user), and each drain's
     completion timestamp closes out every request it finished.  Latency is
     completion minus nominal arrival.
+
+    ``observability`` (an :class:`repro.obs.Observability`, typically the
+    same handle the engines were built with) folds the metrics-registry
+    snapshot into ``TrafficReport.metrics`` and brackets the run with trace
+    instants — the driver itself stays un-instrumented beyond that (the
+    engines emit the real spans).
     """
     is_router = isinstance(server, FaultAwareRouter)
     engines = server.engines if is_router else [server]
@@ -216,6 +226,10 @@ def run_open_loop(server, cfg: TrafficConfig, *,
         install_chaos(engines, chaos, sleep=sleep)
     reqs, arr = build_requests(cfg, chaos=chaos)
     n = len(reqs)
+    tracer = observability.tracer if observability is not None else None
+    if tracer is not None:
+        tracer.instant("traffic_start", cat="traffic", n_offered=n,
+                       rate_hz=cfg.rate_hz, p_event=cfg.p_event)
     t0 = clock()
     completed_at = np.full(n, np.nan)
     done = [False] * n
@@ -274,6 +288,13 @@ def run_open_loop(server, cfg: TrafficConfig, *,
         retries, crashes = st["retries"], st["crashes"]
         timeouts, degraded = st["timeouts"], st["degraded_route"]
     estats = [e.stats() for e in engines]
+    if tracer is not None:
+        tracer.instant("traffic_end", cat="traffic",
+                       n_completed=int(completed.sum()),
+                       duration_s=duration)
+    metrics_snapshot = (observability.metrics.snapshot()
+                        if observability is not None
+                        and observability.metrics is not None else None)
     return TrafficReport(
         n_offered=n,
         n_completed=int(completed.sum()),
@@ -293,4 +314,5 @@ def run_open_loop(server, cfg: TrafficConfig, *,
         max_degradation_level=max(
             (max((tr["to_level"] for tr in s["ladder_transition_log"]),
                  default=0) for s in estats), default=0),
+        metrics=metrics_snapshot,
     )

@@ -69,6 +69,7 @@ def train_online(
     resume: bool = False,
     interpret: bool | None = None,
     faults: faults_mod.FaultModel | None = None,
+    observability=None,
 ) -> OnlineTrainResult:
     """Supervised-STDP training of the readout tile over multiple epochs.
 
@@ -88,8 +89,17 @@ def train_online(
     The returned network carries the *programmed* bits — evaluate it under
     the same ``FaultModel`` (``network.plan(..., faults=...)``) for the
     deployed faulted accuracy.
+
+    ``observability`` (an :class:`repro.obs.Observability`) traces each
+    epoch as a complete span (accuracy/updates in args) and books per-epoch
+    wall time, column updates, and the latest accuracy into the registry —
+    off by default, and inert for the math (spans observe, never perturb).
     """
     from repro.checkpoint import io as ckpt_io
+
+    tracer = observability.tracer if observability is not None else None
+    metrics = observability.metrics if observability is not None else None
+    import time as _time
 
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -141,6 +151,8 @@ def train_online(
     accuracy: list[float] = []
     n_updates: list[int] = []
     for epoch in range(start_epoch, epochs):
+        ep_t0 = tracer.now_us() if tracer is not None else 0.0
+        ep_wall0 = _time.perf_counter() if observability is not None else 0.0
         ep_key = jax.random.fold_in(key, epoch)
         if shuffle:
             # sample draws fold in indices 0..n_samples-1; n_samples is free
@@ -176,6 +188,24 @@ def train_online(
             eval_bits, eval_pre, eval_labels, network.out_offset)
         accuracy.append(float(acc))
         n_updates.append(int(n))
+        if tracer is not None:
+            tracer.complete("train_epoch", ep_t0, tracer.now_us() - ep_t0,
+                            cat="train", epoch=epoch,
+                            accuracy=accuracy[-1], n_updates=n_updates[-1])
+        if metrics is not None:
+            metrics.counter(
+                "esam_train_epochs_total",
+                "online-learning epochs completed").inc()
+            metrics.counter(
+                "esam_train_column_updates_total",
+                "STDP column updates applied").inc(n_updates[-1])
+            metrics.gauge(
+                "esam_train_accuracy",
+                "readout accuracy after the latest epoch").set(accuracy[-1])
+            metrics.histogram(
+                "esam_train_epoch_seconds",
+                "wall time per online-learning epoch").observe(
+                    _time.perf_counter() - ep_wall0)
         at_end = epoch + 1 == epochs
         if checkpoint_dir is not None and (
             at_end or (checkpoint_every and (epoch + 1) % checkpoint_every == 0)
